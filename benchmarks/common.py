@@ -1,0 +1,52 @@
+"""Shared benchmark plumbing. Output convention (run.py):
+``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def measure_memcpy_bw(nbytes: int = 1 << 26) -> float:
+    """Host memcpy bandwidth (bytes/s) — anchors the fabric calibration."""
+    import numpy as np
+    src = np.random.default_rng(0).integers(0, 255, nbytes, dtype=np.uint8)
+    dst = np.empty_like(src)
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        dst[:] = src
+        best = min(best, time.perf_counter() - t0)
+    return nbytes / best
+
+
+def calibrated_fabric():
+    """Fabric with constants tied to this host's memcpy bandwidth so the
+    paper's hardware-class ratios hold: Mercury-RPC effective payload path
+    ≈ 0.43× memcpy bw; RDMA READ ≈ 1.65× memcpy bw (on the paper's IB
+    cluster: ~7 GB/s memcpy, ~3 GB/s RPC payload, ~11.5 GB/s RDMA)."""
+    from repro.core import Fabric, FabricConfig
+    bw = measure_memcpy_bw()
+    return Fabric(FabricConfig(rpc_bw=0.43 * bw, rdma_bw=1.65 * bw))
+
+
+def timeit(fn, *, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

@@ -1,0 +1,45 @@
+"""Device-side kernel micro-bench (beyond paper): the serialization pack the
+baseline pays, the take-gather behind column selectivity, bitmap expand.
+
+Wall times here are interpret-mode (CPU) — meaningful for relative shape
+scaling only; the derived column reports the DMA-roofline time the tile
+layout implies on TPU v5e (bytes / 819 GB/s), which is the perf target.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.pack import pack_segments, packed_nbytes
+from repro.kernels.take import expand_validity, take_column
+from repro.utils.roofline import HBM_BW
+
+from .common import Row, timeit
+
+
+def run() -> list[Row]:
+    rng = np.random.default_rng(0)
+    rows: list[Row] = []
+
+    for nseg, seg_bytes in ((8, 1 << 16), (32, 1 << 20)):
+        segs = [rng.integers(0, 255, seg_bytes, dtype=np.uint8)
+                for _ in range(nseg)]
+        t = timeit(lambda: pack_segments(segs), repeats=3)
+        total = packed_nbytes([s.nbytes for s in segs])
+        roof_us = 2 * total / HBM_BW * 1e6      # read + write
+        rows.append(Row(f"pack_kernel_{nseg}x{seg_bytes}B", t * 1e6,
+                        f"tpu_roofline_us={roof_us:.1f}"))
+
+    vals = rng.standard_normal((1 << 14, 128)).astype(np.float32)
+    idx = rng.integers(0, 1 << 14, 1 << 12).astype(np.int32)
+    t = timeit(lambda: take_column(vals, idx), repeats=3)
+    moved = idx.size * 128 * 4 * 2
+    rows.append(Row("take_4096rows_w128", t * 1e6,
+                    f"tpu_roofline_us={moved / HBM_BW * 1e6:.2f}"))
+
+    bm = np.packbits(rng.integers(0, 2, 1 << 20).astype(bool),
+                     bitorder="little")
+    t = timeit(lambda: expand_validity(bm, 1 << 20), repeats=3)
+    moved = bm.nbytes + (1 << 20)
+    rows.append(Row("bitmap_expand_1Mbits", t * 1e6,
+                    f"tpu_roofline_us={moved / HBM_BW * 1e6:.2f}"))
+    return rows

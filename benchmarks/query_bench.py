@@ -1,0 +1,56 @@
+"""Paper Fig. 3: END-TO-END query execution duration (engine execution +
+transport), Thallus vs RPC. Expect up to ~2.5×: the engine time is common to
+both, so the e2e gain is smaller than the transport-only gain — and it
+shrinks with the result set, same as Fig. 2."""
+from __future__ import annotations
+
+import time
+
+from repro.core import RpcClient, ThallusClient, ThallusServer
+from repro.engine import Engine, make_numeric_table
+
+from .common import Row, calibrated_fabric
+
+TOTAL_COLS = 8
+
+
+def _server(nrows: int) -> ThallusServer:
+    eng = Engine()
+    eng.register("/d", make_numeric_table("t", nrows, TOTAL_COLS,
+                                          batch_rows=min(nrows, 1 << 18)))
+    return ThallusServer(eng, calibrated_fabric())
+
+
+def _e2e_seconds(client_cls, server, sql) -> float:
+    """median of 3: engine time measured for real; transport per the
+    decomposed stats (host costs measured, NIC costs modeled)."""
+    ts = []
+    for _ in range(3):
+        client = client_cls(server)
+        t0 = time.perf_counter()
+        client.run_query(sql, "/d")
+        wall = time.perf_counter() - t0
+        measured_wire = sum(s.wire.measured_copy_s for s in client.stats)
+        engine_s = max(wall - client.transport_seconds() - measured_wire, 0.0)
+        ts.append(engine_s + client.transport_seconds())
+    return sorted(ts)[1]
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for nrows, tag in ((1 << 20, "1M"), (1 << 14, "16k")):
+        server = _server(nrows)
+        for ncols in (2, 8):
+            sql = "SELECT " + ", ".join(f"c{i}" for i in range(ncols)) + " FROM t"
+            t_rpc = _e2e_seconds(RpcClient, server, sql)
+            t_th = _e2e_seconds(ThallusClient, server, sql)
+            rows.append(Row(
+                f"query_e2e_rows{tag}_cols{ncols}", t_th * 1e6,
+                f"speedup={t_rpc / t_th:.2f}x rpc_us={t_rpc*1e6:.1f}"))
+        # filtered query: smaller result set through the same scan
+        sql = "SELECT c0, c1 FROM t WHERE c0 > 1.5"
+        t_rpc = _e2e_seconds(RpcClient, server, sql)
+        t_th = _e2e_seconds(ThallusClient, server, sql)
+        rows.append(Row(f"query_e2e_rows{tag}_filtered", t_th * 1e6,
+                        f"speedup={t_rpc / t_th:.2f}x"))
+    return rows

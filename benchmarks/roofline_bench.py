@@ -1,0 +1,36 @@
+"""Roofline table from the dry-run artifacts (launch/dryrun.py must have
+populated artifacts/dryrun/*.json). One row per (arch × shape × mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import Row
+
+ART_DIR = os.environ.get("DRYRUN_ARTIFACTS", "artifacts/dryrun")
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    paths = sorted(glob.glob(os.path.join(ART_DIR, "*.json")))
+    if not paths:
+        return [Row("roofline_missing", 0.0,
+                    "run: PYTHONPATH=src python -m repro.launch.dryrun --all")]
+    for p in paths:
+        with open(p) as f:
+            art = json.load(f)
+        name = f"roofline_{art['arch']}_{art['shape']}_" \
+               f"{'x'.join(str(v) for v in art['mesh'].values())}"
+        if art["status"] != "ok":
+            rows.append(Row(name, 0.0, art["status"]))
+            continue
+        r = art["roofline"]
+        rows.append(Row(
+            name, r["step_s"] * 1e6,
+            f"bottleneck={r['bottleneck']} C={r['compute_s']*1e3:.1f}ms "
+            f"M={r['memory_s']*1e3:.1f}ms X={r['collective_s']*1e3:.1f}ms "
+            f"useful={r['useful_flops_ratio']:.2f} "
+            f"mfu_bound={r['mfu_bound']:.3f} "
+            f"fits={art['memory'].get('fits_hbm')}"))
+    return rows

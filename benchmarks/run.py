@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table/figure (+ beyond-paper).
+Prints ``name,us_per_call,derived`` CSV. Paper artifacts:
+
+  serialization_bench — §2   (~30 % serialize / ~0 % deserialize)
+  transport_bench     — Fig 2 (transport duration, up to ~5.5×)
+  query_bench         — Fig 3 (end-to-end duration, up to ~2.5×)
+  kernel_bench        — device-side pack/take/bitmap (beyond paper)
+  roofline_bench      — §Roofline table from dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (kernel_bench, query_bench, roofline_bench,
+                   serialization_bench, transport_bench)
+
+    modules = [
+        ("serialization", serialization_bench),
+        ("transport", transport_bench),
+        ("query", query_bench),
+        ("kernel", kernel_bench),
+        ("roofline", roofline_bench),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for tag, mod in modules:
+        if only and only != tag:
+            continue
+        for row in mod.run():
+            print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

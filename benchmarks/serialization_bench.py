@@ -1,0 +1,31 @@
+"""Paper §2: serialization overhead in the RPC baseline.
+
+The paper measures ~30 % of RPC duration spent serializing a record batch
+and ~0.0004 % deserializing (zero-copy views). We reproduce the measurement
+with SELECT-all-columns over a wide numeric table: serialize/deserialize are
+REAL memcpys on this host; the wire is the calibrated fabric model.
+"""
+from __future__ import annotations
+
+from repro.core import RpcClient, ThallusServer
+from repro.engine import Engine, make_numeric_table
+
+from .common import Row, calibrated_fabric
+
+
+def run() -> list[Row]:
+    rows = []
+    for nrows in (1 << 16, 1 << 20):
+        eng = Engine()
+        eng.register("/d", make_numeric_table("t", nrows, 8,
+                                              batch_rows=min(nrows, 1 << 18)))
+        server = ThallusServer(eng, calibrated_fabric())
+        client = RpcClient(server)
+        client.run_query("SELECT * FROM t", "/d")
+        ser = sum(s.serialize_s for s in client.stats)
+        de = sum(s.deserialize_s for s in client.stats)
+        total = sum(s.total_s for s in client.stats)
+        rows.append(Row(f"serialize_fraction_rows{nrows}", ser / len(client.stats) * 1e6,
+                        f"ser={ser/total:.1%} (paper ~30%) de={de/total:.2%} "
+                        f"(paper ~0%)"))
+    return rows

@@ -1,0 +1,41 @@
+"""Paper Fig. 2: data transport duration, Thallus vs Thallium RPC, across
+column-selectivity (result-set size). Expect up to ~5.5× and a gain that
+shrinks as the result set shrinks (constant RDMA setup costs dominate)."""
+from __future__ import annotations
+
+from repro.core import RpcClient, ThallusClient, ThallusServer
+from repro.engine import Engine, make_numeric_table
+
+from .common import Row, calibrated_fabric
+
+TOTAL_COLS = 8
+
+
+def _server(nrows: int) -> ThallusServer:
+    eng = Engine()
+    eng.register("/d", make_numeric_table("t", nrows, TOTAL_COLS,
+                                          batch_rows=min(nrows, 1 << 18)))
+    return ThallusServer(eng, calibrated_fabric())
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    # -- column-selectivity sweep at a large result set (Fig 2 shape) -------
+    for nrows, tag in ((1 << 20, "1M"), (1 << 14, "16k"), (1 << 10, "1k")):
+        server = _server(nrows)
+        for ncols in (1, 2, 4, 8):
+            sql = "SELECT " + ", ".join(f"c{i}" for i in range(ncols)) + " FROM t"
+
+            def med(cls):
+                ts = []
+                for _ in range(3):
+                    c = cls(server)
+                    c.run_query(sql, "/d")
+                    ts.append(c.transport_seconds())
+                return sorted(ts)[1]
+
+            t_rpc, t_th = med(RpcClient), med(ThallusClient)
+            rows.append(Row(
+                f"transport_rows{tag}_cols{ncols}", t_th * 1e6,
+                f"speedup={t_rpc / t_th:.2f}x rpc_us={t_rpc*1e6:.1f}"))
+    return rows

@@ -1,0 +1,48 @@
+"""Quickstart: the Thallus protocol end to end in ~60 lines.
+
+Builds a columnar dataset, runs a SQL query on the server, streams the
+results to a client over BOTH transports, and prints the paper's headline
+comparison (zero-copy vs serialize).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import Fabric, RpcClient, ThallusClient, ThallusServer
+from repro.engine import Engine, make_numeric_table
+
+
+def main() -> None:
+    # -- server: a DuckDB-style engine over columnar shards -----------------
+    engine = Engine()
+    engine.register("/data/events", make_numeric_table("events", 1 << 18, 8))
+    server = ThallusServer(engine, Fabric())
+
+    sql = "SELECT c0, c1, c2, c3 FROM events WHERE c0 > 0.5"
+
+    # -- the paper's protocol: init_scan -> iterate(do_rdma) -> finalize ----
+    thallus = ThallusClient(server)
+    batches = thallus.run_query(sql, "/data/events")
+    rows = sum(b.num_rows for b in batches)
+    print(f"thallus: {len(batches)} batches, {rows} rows")
+    print(f"  transport {thallus.transport_seconds()*1e3:.2f} ms "
+          f"(serialize copies: 0 — buffers were exposed in place)")
+
+    # -- the baseline: serialize into one buffer, ship over RPC -------------
+    rpc = RpcClient(server)
+    rpc.run_query(sql, "/data/events")
+    ser = sum(s.serialize_s for s in rpc.stats)
+    print(f"rpc:     transport {rpc.transport_seconds()*1e3:.2f} ms "
+          f"({ser/rpc.transport_seconds():.0%} of it serializing)")
+    print(f"speedup: {rpc.transport_seconds()/thallus.transport_seconds():.2f}x "
+          "(paper: up to 5.5x, shrinking with result size)")
+
+    # -- results agree bit-for-bit ------------------------------------------
+    a = np.concatenate([b.column("c1").values for b in thallus.batches])
+    b = np.concatenate([b.column("c1").values for b in rpc.batches])
+    np.testing.assert_array_equal(a, b)
+    print("transports agree bit-for-bit")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Serve a small model with batched requests; responses return as columnar
+record batches over the Thallus transport (the serving direction).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.core import Fabric, ThallusTransport
+from repro.models import decode, init_params, prefill
+from repro.serving import Batcher, Request, completions_to_batch
+
+
+def main() -> None:
+    cfg = get_config("olmoe-1b-7b").reduced()     # tiny MoE, CPU-sized
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    batcher = Batcher(
+        jax.jit(lambda t: prefill(cfg, params, {"tokens": t}, remat="none")),
+        jax.jit(lambda c, t, p: decode(cfg, params, c, t, p)),
+        batch_size=4)
+
+    rng = np.random.default_rng(7)
+    for i in range(10):
+        plen = int(rng.integers(4, 12))
+        batcher.submit(Request(i, rng.integers(
+            0, cfg.vocab_size, plen).astype(np.int32), max_new_tokens=6))
+
+    completions = batcher.run()
+    out = completions_to_batch(completions)
+    delivered, stats = ThallusTransport(Fabric()).send_batch(out)
+    print(f"served {len(completions)} requests "
+          f"({delivered.num_rows} tokens) — response batch "
+          f"{delivered.nbytes} B over Thallus in {stats.total_s*1e6:.1f} us, "
+          f"serialize copies: {stats.serialize_s == 0.0 and 'zero'}")
+    for c in completions[:5]:
+        print(f"  req {c.request_id}: {c.tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""End-to-end driver: train a reduced LM for a few hundred steps with the
+Thallus data plane, checkpoints, and a mid-run crash + resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch granite-3-2b]
+                                               [--steps 300]
+
+This wraps the production launcher (repro.launch.train); the same command
+scales to the full configs on a real mesh.
+"""
+import subprocess
+import sys
+
+ARCH = sys.argv[sys.argv.index("--arch") + 1] if "--arch" in sys.argv else "granite-3-2b"
+STEPS = int(sys.argv[sys.argv.index("--steps") + 1]) if "--steps" in sys.argv else 300
+
+
+def run(extra):
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch", ARCH,
+           "--reduced", "--seq-len", "128", "--batch-seqs", "8",
+           "--ckpt-dir", "artifacts/example_ckpt", "--ckpt-every", "100",
+           "--log-every", "25", "--lr", "1e-3"] + extra
+    print("+", " ".join(cmd[2:]))
+    subprocess.run(cmd, check=True)
+
+
+def main() -> None:
+    half = max(STEPS // 2 // 100 * 100, 100)
+    # phase 1: train halfway, then simulate a crash
+    run(["--steps", str(STEPS), "--kill-at", str(half)])
+    print(f"\n--- simulated node failure at step {half}; relaunching ---\n")
+    # phase 2: relaunch — resumes from the latest checkpoint + data cursor
+    run(["--steps", str(STEPS)])
+
+
+if __name__ == "__main__":
+    main()

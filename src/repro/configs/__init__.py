@@ -1,0 +1,3 @@
+from .base import (ArchConfig, EncDecConfig, HybridConfig, MoEConfig,  # noqa: F401
+                   SHAPES, SSMConfig, ShapeConfig, VLMConfig, shape_applicable)
+from .registry import ARCH_IDS, all_cells, get_config, get_shape  # noqa: F401

@@ -1,0 +1,2 @@
+from .tokens import TOKEN_SCHEMA, batch_to_tokens, make_token_table, shift_labels  # noqa: F401
+from .loader import LoaderStats, ThallusLoader  # noqa: F401

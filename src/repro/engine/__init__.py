@@ -1,0 +1,5 @@
+"""Columnar query engine (DuckDB stand-in for the Thallus server)."""
+from .table import Catalog, Table, make_mixed_table, make_numeric_table  # noqa: F401
+from .executor import Engine, QueryReader  # noqa: F401
+from .sql import Query, parse  # noqa: F401
+from .expressions import BinOp, Col, Expr, IsNull, Lit, Not, filter_mask  # noqa: F401

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for the paper's memory-movement hot spots."""

@@ -1,0 +1,3 @@
+from .attention import flash_attention  # noqa: F401
+from .ops import flash_gqa  # noqa: F401
+from .ref import attention_ref  # noqa: F401

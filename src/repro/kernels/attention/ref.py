@@ -1,0 +1,22 @@
+"""Oracle for the flash-attention kernel: plain materialized attention."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True) -> jnp.ndarray:
+    """q/k/v: (BH, S, hd) (heads pre-expanded) -> (BH, Sq, hd)."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for the segment pack/unpack kernels.
+
+Layout convention (TPU-native adaptation of Arrow buffer padding):
+
+* every segment is padded to a multiple of one VMEM tile
+  (``TILE_ROWS×TILE_LANES`` bytes — Arrow pads to 64 B for the same
+  alignment reason, we pad to the TPU tile);
+* the packed buffer is the tile-aligned concatenation, so segment starts
+  are always tile boundaries and the kernel is a pure tile-gather with a
+  scalar-prefetched routing table (no unaligned copies on the MXU-free
+  data path).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+TILE_ROWS = 32
+TILE_LANES = 128
+TILE_BYTES = TILE_ROWS * TILE_LANES  # 4096
+
+
+def tiles_for(nbytes: int) -> int:
+    return max(1, -(-nbytes // TILE_BYTES))
+
+
+def layout_segments(seg_lens: list[int]) -> tuple[np.ndarray, np.ndarray, int]:
+    """Routing table for the kernel.
+
+    Returns (seg_ids, tile_ids, total_tiles): for every *output* tile t,
+    which segment it comes from and which tile within that segment.
+    """
+    seg_ids, tile_ids = [], []
+    for s, n in enumerate(seg_lens):
+        for t in range(tiles_for(n)):
+            seg_ids.append(s)
+            tile_ids.append(t)
+    return (np.asarray(seg_ids, np.int32), np.asarray(tile_ids, np.int32),
+            len(seg_ids))
+
+
+def stage_segments(segments: list[np.ndarray]) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side staging into the kernel's ragged-2D form:
+    (n_seg, max_tiles, TILE_ROWS, TILE_LANES) uint8 + per-segment byte lens."""
+    seg_lens = np.asarray([s.nbytes for s in segments], np.int32)
+    max_tiles = max(tiles_for(int(n)) for n in seg_lens)
+    out = np.zeros((len(segments), max_tiles, TILE_ROWS, TILE_LANES), np.uint8)
+    for i, s in enumerate(segments):
+        raw = s.reshape(-1).view(np.uint8)
+        out[i].reshape(-1)[: raw.nbytes] = raw
+    return out, seg_lens
+
+
+def pack_ref(src: jnp.ndarray, seg_ids: jnp.ndarray,
+             tile_ids: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: gather the routed tiles. src (n_seg, max_tiles, R, L) ->
+    (n_out_tiles, R, L)."""
+    return src[seg_ids, tile_ids]
+
+
+def unpack_ref(packed: jnp.ndarray, seg_ids: jnp.ndarray,
+               tile_ids: jnp.ndarray, n_seg: int,
+               max_tiles: int) -> jnp.ndarray:
+    """Oracle for the inverse: scatter packed tiles back into the ragged-2D
+    segment form (tiles not covered stay zero)."""
+    out = jnp.zeros((n_seg, max_tiles) + packed.shape[1:], packed.dtype)
+    return out.at[seg_ids, tile_ids].set(packed)

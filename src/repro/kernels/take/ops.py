@@ -1,0 +1,40 @@
+"""jit'd wrappers: padding/shape management for take + bitmap_expand."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .ref import bitmap_expand_ref, take_ref  # noqa: F401 (re-export oracles)
+from .take import LANES, bitmap_expand, take_rows
+
+_BM_ALIGN = 8 * LANES  # bitmap kernel granularity in bytes
+
+
+def take_column(values: np.ndarray | jax.Array, indices: np.ndarray | jax.Array,
+                *, interpret: bool = True) -> jax.Array:
+    """Row-gather a 1-D or 2-D fixed-width column by a selection vector.
+    Handles width padding to the 128-lane tile and restores the shape."""
+    values = jnp.asarray(values)
+    indices = jnp.asarray(indices, jnp.int32)
+    squeeze = values.ndim == 1
+    if squeeze:
+        values = values[:, None]
+    n, w = values.shape
+    w_pad = -w % LANES
+    if w_pad:
+        values = jnp.pad(values, ((0, 0), (0, w_pad)))
+    out = take_rows(values, indices, interpret=interpret)
+    out = out[:, :w]
+    return out[:, 0] if squeeze else out
+
+
+def expand_validity(bitmap: np.ndarray | jax.Array, num_rows: int, *,
+                    interpret: bool = True) -> jax.Array:
+    """Arrow validity bitmap -> bool mask of length num_rows."""
+    bitmap = jnp.asarray(bitmap, jnp.uint8)
+    pad = -bitmap.shape[0] % _BM_ALIGN
+    if pad:
+        bitmap = jnp.pad(bitmap, (0, pad))
+    mask = bitmap_expand(bitmap, interpret=interpret)
+    return mask[:num_rows]

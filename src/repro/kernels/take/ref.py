@@ -1,0 +1,17 @@
+"""Pure-jnp oracles for the selection-vector kernels (query-engine hot spot
+behind the paper's column-selectivity experiments)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def take_ref(values: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+    """out[i, :] = values[indices[i], :] — row gather on a fixed-width column
+    laid out (rows, width)."""
+    return values[indices]
+
+
+def bitmap_expand_ref(bitmap: jnp.ndarray, num_rows: int) -> jnp.ndarray:
+    """LSB-packed uint8[ceil(n/8)] -> bool[num_rows] (Arrow validity)."""
+    bits = jnp.unpackbits(bitmap, bitorder="little")
+    return bits[:num_rows].astype(jnp.bool_)

@@ -1,0 +1,80 @@
+"""Pallas TPU kernels: selection-vector row gather + validity-bitmap expand.
+
+``take`` drives the column-selectivity path: after a WHERE filter produces a
+selection vector, every projected column gathers its surviving rows. The
+selection vector rides in scalar-prefetch SMEM so the HBM→VMEM DMA for each
+row block is steered directly by indices (no second pass).
+
+Row blocking: indices are processed in blocks of ``ROW_BLOCK`` output rows;
+each kernel step copies one (1, width_block) row stripe. Width is tiled at
+128 lanes (VPU lane width). For f32 the sublane dim wants multiples of 8 —
+we gather row-at-a-time which Mosaic handles via strided DMA; on real HW a
+production variant would gather 8 rows per step into a (8,128) tile.
+
+``bitmap_expand`` turns Arrow's LSB-packed validity bytes into a bool mask
+with a shift-and-mask inside VMEM: (8,128) bytes → (8,1024) bools per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+BITS = 8
+
+
+def _take_kernel(idx_ref, src_ref, out_ref):
+    out_ref[...] = src_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def take_rows(values: jax.Array, indices: jax.Array, *,
+              interpret: bool = True) -> jax.Array:
+    """out[i] = values[indices[i]]. values: (n_rows, width) with width a
+    multiple of 128; indices: (n_out,) int32."""
+    n_out = indices.shape[0]
+    width = values.shape[1]
+    w_tiles = width // LANES
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_out, w_tiles),
+        in_specs=[
+            pl.BlockSpec((1, LANES), lambda i, j, idx: (idx[i], j)),
+        ],
+        out_specs=pl.BlockSpec((1, LANES), lambda i, j, idx: (i, j)),
+    )
+    return pl.pallas_call(
+        _take_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out, width), values.dtype),
+        interpret=interpret,
+    )(indices, values)
+
+
+def _bitmap_kernel(bm_ref, out_ref):
+    bytes_ = bm_ref[...]                                   # (8, 128) uint8
+    shifts = jax.lax.broadcasted_iota(jnp.uint8, (8, LANES, BITS), 2)
+    bits = (bytes_[:, :, None] >> shifts) & jnp.uint8(1)   # (8, 128, 8)
+    out_ref[...] = bits.reshape(8, LANES * BITS).astype(jnp.bool_)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitmap_expand(bitmap: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """LSB-packed bits -> bool. bitmap: (n_bytes,) uint8 with n_bytes a
+    multiple of 8*128; -> (n_bytes * 8,) bool."""
+    n_bytes = bitmap.shape[0]
+    rows = n_bytes // LANES
+    bm2d = bitmap.reshape(rows, LANES)
+    out = pl.pallas_call(
+        _bitmap_kernel,
+        grid=(rows // 8,),
+        in_specs=[pl.BlockSpec((8, LANES), lambda r: (r, 0))],
+        out_specs=pl.BlockSpec((8, LANES * BITS), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES * BITS), jnp.bool_),
+        interpret=interpret,
+    )(bm2d)
+    return out.reshape(-1)

@@ -1,0 +1,76 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+# The 512 placeholder host devices exist ONLY for this dry-run entry point.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES  # noqa: E402
+from repro.launch.dryrun_lib import format_cell, run_cell, save_artifact  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.training.train_step import TrainConfig  # noqa: E402
+from repro.training.optimizer import OptimizerConfig  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run: lower + "
+                                 "compile every (arch × shape × mesh) cell")
+    ap.add_argument("--arch", choices=ARCH_IDS, action="append")
+    ap.add_argument("--shape", choices=tuple(SHAPES), action="append")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2×16×16 = 512-chip mesh")
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--remat", default="full", choices=("none", "dots", "full"))
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-dp", action="store_true",
+                    help="int8+EF gradient compression on the DP reduce")
+    ap.add_argument("--print-hlo", action="store_true")
+    ap.add_argument("--layout", default="tp2d", choices=("tp2d", "fsdp"),
+                    help="tp2d: 2D data×model; fsdp: pure ZeRO-3 (no TP)")
+    ap.add_argument("--baseline-rules", action="store_true",
+                    help="paper-baseline sharding: head_dim attention "
+                         "fallback + global MoE dispatch (the pre-"
+                         "hillclimb configuration)")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.all or not args.arch else args.arch
+    shapes = list(SHAPES) if args.all or not args.shape else args.shape
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    tcfg = TrainConfig(optimizer=OptimizerConfig(), remat=args.remat,
+                       microbatches=args.microbatches,
+                       compress_dp_grads=args.compress_dp,
+                       param_dtype="bfloat16")
+
+    options = {"layout": args.layout}
+    if args.baseline_rules:
+        options.update(attn_fallback="head_dim", moe_local_dispatch=False)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            art = run_cell(arch, shape, mesh, tcfg=tcfg,
+                           collect_hlo=args.print_hlo, options=options)
+            path = save_artifact(art, args.out)
+            print(format_cell(art), flush=True)
+            if art["status"] == "ok":
+                mem = art["memory"]
+                print(f"    memory_analysis: args={mem['argument_bytes']/2**30:.2f}GiB "
+                      f"out={mem['output_bytes']/2**30:.2f}GiB "
+                      f"temp={mem['temp_bytes']/2**30:.2f}GiB   "
+                      f"cost: flops/dev={art['cost'].get('flops',0):.3e} "
+                      f"bytes/dev={art['cost'].get('bytes accessed',0):.3e}")
+                print(f"    collectives: "
+                      f"{json.dumps(art['collectives']['counts'])} "
+                      f"wire={art['collectives']['total_wire_bytes']/2**20:.1f}MiB/dev "
+                      f"-> {path}")
+            if args.print_hlo and "hlo" in art:
+                print(art["hlo"][:20000])
+            failures += art["status"] == "error"
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

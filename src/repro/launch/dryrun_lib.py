@@ -1,0 +1,316 @@
+"""Dry-run core: lower + compile every (arch × shape × mesh) cell, extract
+memory / cost / collective analysis, emit JSON artifacts.
+
+No XLA_FLAGS side effects here — ``dryrun.py`` (the CLI) sets the 512-device
+host platform before importing anything; tests and benchmarks import *this*
+module safely under a 1-device runtime (they pass small meshes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, ArchConfig, ShapeConfig, get_config, shape_applicable
+from ..models import (batch_pspecs, cache_pspecs, cache_spec, decode,
+                      make_rules, mesh_context, param_shapes, param_specs,
+                      prefill)
+from ..models.model import Params
+from ..training.train_step import TrainConfig, make_train_step, train_state_shapes
+from ..utils.hlo import collective_stats
+from ..utils.hlo_cost import FUSED_ATTENTION_FNS, analyze as hlo_analyze
+from ..utils.roofline import Roofline, model_flops
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch: dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.family == "vlm":
+            pn = cfg.vlm.num_patches
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S - pn), i32)
+            batch["labels"] = jax.ShapeDtypeStruct((B, S - pn), i32)
+            batch["patch_embeds"] = jax.ShapeDtypeStruct((B, pn, cfg.d_model), dtype)
+        elif cfg.family == "audio":
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encdec.encoder_seq, cfg.d_model), dtype)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.family == "vlm":
+            pn = cfg.vlm.num_patches
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S - pn), i32)
+            batch["patch_embeds"] = jax.ShapeDtypeStruct((B, pn, cfg.d_model), dtype)
+        elif cfg.family == "audio":
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encdec.encoder_seq, cfg.d_model), dtype)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        return batch
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                "position": jax.ShapeDtypeStruct((), i32)}
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+
+
+def _named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               tcfg: TrainConfig, options: dict | None = None):
+    """Returns (fn, args_shapes, in_shardings, out_shardings, donate).
+
+    Production memory posture: the train state / decode cache argument is
+    DONATED (in-place update, no double residency), and outputs carry
+    explicit shardings so prefill caches land sharded instead of wherever
+    propagation leaves them.
+    """
+    dtype = jnp.dtype(tcfg.param_dtype)
+    pshapes = param_shapes(cfg, dtype)
+    pspecs = param_specs(cfg, pshapes, mesh, options)
+
+    if shape.kind == "train":
+        state_shapes = train_state_shapes(cfg, tcfg)
+        state_specs: dict[str, Any] = {
+            "params": pspecs,
+            "opt": {k: pspecs for k in state_shapes["opt"]},
+            "step": P(),
+        }
+        if "ef" in state_shapes:
+            state_specs["ef"] = pspecs
+        batch_shapes = input_specs(cfg, shape, dtype)
+        bspecs = batch_pspecs(cfg, batch_shapes, mesh, options)
+        fn = make_train_step(cfg, tcfg)
+        metric_specs = {"loss": P(), "grad_norm": P(), "lr": P(), "tokens": P()}
+        return (fn, (state_shapes, batch_shapes),
+                (_named(mesh, state_specs), _named(mesh, bspecs)),
+                (_named(mesh, state_specs), _named(mesh, metric_specs)),
+                (0,))
+
+    if shape.kind == "prefill":
+        batch_shapes = input_specs(cfg, shape, dtype)
+        bspecs = batch_pspecs(cfg, batch_shapes, mesh, options)
+        cshape = cache_spec(cfg, shape.global_batch, shape.seq_len, dtype)
+        cspecs = cache_pspecs(cfg, cshape, mesh, options)
+        rules = make_rules(cfg, mesh, options)
+        from ..models.sharding import spec_of
+        logit_spec = spec_of(("batch", None, "vocab"), rules,
+                             shape=(shape.global_batch, 1, cfg.padded_vocab),
+                             mesh=mesh)
+
+        def fn(params, batch):
+            return prefill(cfg, params, batch, remat=tcfg.remat)
+
+        return (fn, (pshapes, batch_shapes),
+                (_named(mesh, pspecs), _named(mesh, bspecs)),
+                (NamedSharding(mesh, logit_spec), _named(mesh, cspecs)),
+                ())
+
+    # decode
+    cshape = cache_spec(cfg, shape.global_batch, shape.seq_len, dtype)
+    cspecs = cache_pspecs(cfg, cshape, mesh, options)
+    batch_shapes = input_specs(cfg, shape, dtype)
+    bspecs = batch_pspecs(cfg, batch_shapes, mesh, options)
+    rules = make_rules(cfg, mesh, options)
+    from ..models.sharding import spec_of
+    logit_spec = spec_of(("batch", None, "vocab"), rules,
+                         shape=(shape.global_batch, 1, cfg.padded_vocab),
+                         mesh=mesh)
+
+    def fn(params, cache, tokens, position):
+        return decode(cfg, params, cache, tokens, position)
+
+    return (fn, (pshapes, cshape, batch_shapes["tokens"],
+                 batch_shapes["position"]),
+            (_named(mesh, pspecs), _named(mesh, cspecs),
+             NamedSharding(mesh, bspecs["tokens"]),
+             NamedSharding(mesh, bspecs["position"])),
+            (NamedSharding(mesh, logit_spec), _named(mesh, cspecs)),
+            (1,))
+
+
+HBM_BYTES_PER_DEVICE = 16 * 2**30   # v5e-class
+
+
+def run_cell(arch: str, shape_name: str, mesh: Mesh, *,
+             tcfg: TrainConfig | None = None,
+             collect_hlo: bool = False,
+             auto_fit: bool = True,
+             options: dict | None = None) -> dict:
+    """Lower + compile one cell; return the artifact dict.
+
+    ``auto_fit``: if a *train* cell's per-device peak exceeds HBM, retry
+    with more gradient-accumulation microbatches (4, then 16) — the same
+    fit loop the real launcher would run.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    num_devices = mesh.size
+    art: dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": dict(mesh.shape), "devices": num_devices,
+        "kind": shape.kind, "status": "skipped", "skip_reason": why,
+    }
+    if not ok:
+        return art
+    tcfg = tcfg or TrainConfig(param_dtype="bfloat16", remat="full")
+    options = dict(options or {})
+    options.setdefault("global_batch", shape.global_batch)
+    rules = make_rules(cfg, mesh, options)
+    art["rules"] = {k: (list(v) if isinstance(v, tuple) else v)
+                    for k, v in rules.items()}
+    t0 = time.perf_counter()
+    try:
+        mb_ladder = [tcfg.microbatches]
+        if auto_fit and shape.kind == "train":
+            mb_ladder += [m for m in (4, 16) if m > tcfg.microbatches
+                          and shape.global_batch % m == 0]
+        compiled = None
+        for mb in mb_ladder:
+            tcfg_i = dataclasses.replace(tcfg, microbatches=mb)
+            fn, args, in_shardings, out_shardings, donate = build_cell(
+                cfg, shape, mesh, tcfg_i, options)
+            with mesh, mesh_context(mesh, rules):
+                lowered = jax.jit(fn, in_shardings=in_shardings,
+                                  out_shardings=out_shardings,
+                                  donate_argnums=donate).lower(*args)
+                t1 = time.perf_counter()
+                compiled = lowered.compile()
+                t2 = time.perf_counter()
+            mem_try = compiled.memory_analysis()
+            peak = (mem_try.temp_size_in_bytes
+                    + max(mem_try.argument_size_in_bytes,
+                          mem_try.output_size_in_bytes))
+            art["microbatches"] = mb
+            if peak <= HBM_BYTES_PER_DEVICE or mb == mb_ladder[-1]:
+                break
+            art.setdefault("autofit_attempts", []).append(
+                {"microbatches": mb, "peak_bytes": int(peak)})
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        donated = bool(donate)
+        _peak = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                 - (min(mem.output_size_in_bytes, mem.temp_size_in_bytes)
+                    if donated else 0)
+                 + (0 if donated else mem.output_size_in_bytes))
+        colls = collective_stats(hlo, num_devices)   # static (no-loop) view
+        loop_cost = hlo_analyze(hlo, num_devices)    # trip-count-aware
+        # second accounting: attention/SSD interiors as fused Pallas kernels
+        # (VMEM-resident scores) — the TPU-native memory model
+        fused_cost = hlo_analyze(hlo, num_devices,
+                                 fused_functions=FUSED_ATTENTION_FNS)
+
+        n_params = cfg.num_params()
+        n_active = cfg.num_params(active_only=True)
+        mf = model_flops(n_active, shape.tokens_per_step, shape.kind)
+        roof = Roofline(
+            flops_per_device=loop_cost.flops,
+            bytes_per_device=loop_cost.bytes,
+            collective_bytes_per_device=loop_cost.collective_wire_bytes,
+            model_flops_per_device=mf / num_devices,
+        )
+        roof_fused = Roofline(
+            flops_per_device=fused_cost.flops,
+            bytes_per_device=fused_cost.bytes,
+            collective_bytes_per_device=fused_cost.collective_wire_bytes,
+            model_flops_per_device=mf / num_devices,
+        )
+        art.update(
+            status="ok",
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "generated_code_bytes": mem.generated_code_size_in_bytes,
+                "donated_args": donated,
+                # XLA:CPU ignores donation, so its `temp` contains a fresh
+                # copy of the (donated) state/cache that TPU would alias in
+                # place. TPU-peak model: args + temp, minus the output-sized
+                # copy when args are donated. Raw numbers stay above.
+                "peak_bytes_per_device": int(_peak),
+                "fits_hbm": bool(_peak <= HBM_BYTES_PER_DEVICE),
+            },
+            cost={k: float(v) for k, v in cost.items()
+                  if isinstance(v, (int, float))},
+            loop_cost={
+                "flops": loop_cost.flops,
+                "transcendentals": loop_cost.transcendentals,
+                "bytes": loop_cost.bytes,
+                "collective_wire_bytes": loop_cost.collective_wire_bytes,
+                "collective_counts": loop_cost.collective_counts,
+                "collective_bytes_by_op": loop_cost.collective_bytes_by_op,
+            },
+            collectives={
+                "counts": colls.counts,
+                "wire_bytes": colls.wire_bytes,
+                "total_wire_bytes": colls.total_wire_bytes,
+            },
+            params=n_params, active_params=n_active,
+            tokens_per_step=shape.tokens_per_step,
+            roofline=roof.to_dict(),
+            roofline_fused=roof_fused.to_dict(),
+        )
+        if collect_hlo:
+            art["hlo"] = hlo
+    except Exception as e:  # noqa: BLE001 — cell failures are data
+        art.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    return art
+
+
+def save_artifact(art: dict, out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "x".join(str(v) for v in art["mesh"].values())
+    path = os.path.join(out_dir, f"{art['arch']}_{art['shape']}_{mesh_tag}.json")
+    art = {k: v for k, v in art.items() if k != "hlo"}
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1)
+    return path
+
+
+def format_cell(art: dict) -> str:
+    if art["status"] == "skipped":
+        return f"{art['arch']:24s} {art['shape']:12s} SKIP ({art['skip_reason']})"
+    if art["status"] == "error":
+        return f"{art['arch']:24s} {art['shape']:12s} ERROR {art['error'][:90]}"
+    r = art["roofline"]
+    rf = art.get("roofline_fused", r)
+    m = art["memory"]
+    return (f"{art['arch']:24s} {art['shape']:12s} ok "
+            f"compile={art['compile_s']:6.1f}s "
+            f"mem/dev={m['peak_bytes_per_device']/2**30:6.2f}GiB "
+            f"C={r['compute_s']*1e3:8.2f}ms M={r['memory_s']*1e3:8.2f}ms "
+            f"(fused {rf['memory_s']*1e3:8.2f}ms) "
+            f"X={r['collective_s']*1e3:8.2f}ms -> {rf['bottleneck']:10s} "
+            f"useful={r['useful_flops_ratio']:5.2f} "
+            f"mfu≤{rf['mfu_bound']:.2f}")

@@ -1,0 +1,6 @@
+"""Model zoo: dense / MoE / SSM / hybrid / VLM / enc-dec in pure JAX."""
+from .model import (  # noqa: F401
+    batch_pspecs, cache_pspecs, cache_spec, decode, forward, init_cache,
+    init_params, loss_fn, param_shapes, param_specs, prefill,
+)
+from .sharding import constrain, make_rules, mesh_context, set_mesh_context  # noqa: F401

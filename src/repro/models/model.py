@@ -1,0 +1,256 @@
+"""Unified model API: init / forward / loss / prefill / decode per family,
+plus the logical→mesh sharding spec builders used by the launcher.
+
+Batch dict formats:
+  dense/moe/ssm/hybrid train: {"tokens": (B,S) i32, "labels": (B,S) i32}
+  vlm train:  + {"patch_embeds": (B, P, D)}; loss over text positions
+  audio train: {"frames": (B,T,D), "tokens": (B,S), "labels": (B,S)}
+  decode: tokens (B,1) + scalar position against a cache pytree
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from . import encdec, hybrid, mamba2, transformer
+from .layers import softmax_cross_entropy
+from .sharding import make_rules, spec_of
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init / shapes
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32) -> Params:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.init_transformer_params(cfg, key, dtype)
+    if cfg.family == "ssm":
+        return mamba2.init_mamba_params(cfg, key, dtype)
+    if cfg.family == "hybrid":
+        return hybrid.init_hybrid_params(cfg, key, dtype)
+    if cfg.family == "audio":
+        return encdec.init_encdec_params(cfg, key, dtype)
+    raise ValueError(cfg.family)
+
+
+def param_shapes(cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    """Abstract param pytree (ShapeDtypeStruct) — no allocation."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_params(cfg, k, dtype), key)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ArchConfig, params: Params, batch: dict, *,
+            remat: str = "full") -> jax.Array:
+    if cfg.family in ("dense", "moe"):
+        return transformer.transformer_forward(cfg, params, batch["tokens"],
+                                               remat=remat)
+    if cfg.family == "vlm":
+        return transformer.transformer_forward(
+            cfg, params, batch["tokens"],
+            extra_embeds=batch["patch_embeds"], remat=remat)
+    if cfg.family == "ssm":
+        return mamba2.mamba_forward(cfg, params, batch["tokens"], remat=remat)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_forward(cfg, params, batch["tokens"], remat=remat)
+    if cfg.family == "audio":
+        return encdec.encdec_forward(cfg, params, batch["frames"],
+                                     batch["tokens"], remat=remat)
+    raise ValueError(cfg.family)
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: dict, *,
+            remat: str = "full") -> jax.Array:
+    logits = forward(cfg, params, batch, remat=remat)
+    labels = batch["labels"]
+    if cfg.family == "vlm":                      # text positions only
+        logits = logits[:, cfg.vlm.num_patches :, :]
+    mask = (labels >= 0).astype(jnp.float32)
+    return softmax_cross_entropy(logits, jnp.maximum(labels, 0), mask)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ArchConfig, params: Params, batch: dict, *,
+            remat: str = "full"):
+    if cfg.family in ("dense", "moe"):
+        return transformer.transformer_forward(cfg, params, batch["tokens"],
+                                               remat=remat, collect_cache=True)
+    if cfg.family == "vlm":
+        return transformer.transformer_forward(
+            cfg, params, batch["tokens"], extra_embeds=batch["patch_embeds"],
+            remat=remat, collect_cache=True)
+    if cfg.family == "ssm":
+        return mamba2.mamba_prefill(cfg, params, batch["tokens"], remat=remat)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_forward(cfg, params, batch["tokens"], remat=remat,
+                                     collect_cache=True)
+    if cfg.family == "audio":
+        return encdec.encdec_prefill(cfg, params, batch["frames"],
+                                     batch["tokens"], remat=remat)
+    raise ValueError(cfg.family)
+
+
+def decode(cfg: ArchConfig, params: Params, cache: Params, tokens: jax.Array,
+           position: jax.Array):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.transformer_decode(cfg, params, cache, tokens, position)
+    if cfg.family == "ssm":
+        return mamba2.mamba_decode(cfg, params, cache, tokens, position)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_decode(cfg, params, cache, tokens, position)
+    if cfg.family == "audio":
+        return encdec.encdec_decode(cfg, params, cache, tokens, position)
+    raise ValueError(cfg.family)
+
+
+def cache_spec(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.cache_spec(cfg, batch, max_len, dtype)
+    if cfg.family == "ssm":
+        return mamba2.mamba_cache_spec(cfg, batch, dtype)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_cache_spec(cfg, batch, max_len, dtype)
+    if cfg.family == "audio":
+        return encdec.encdec_cache_spec(cfg, batch, max_len, dtype)
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+
+# trailing-dims logical axes by leaf name (left-padded with None for layer /
+# group stacking); MoE experts override below.
+_LEAF_RULES: dict[str, tuple] = {
+    "embed": ("vocab", "fsdp"),
+    "lm_head": ("fsdp", "vocab"),
+    "enc_pos": (None, "fsdp"),
+    "dec_pos": (None, "fsdp"),
+    "wq": ("fsdp", "heads", "head_dim"),
+    "wk": ("fsdp", "kv", "head_dim"),
+    "wv": ("fsdp", "kv", "head_dim"),
+    "wo": ("heads", "head_dim", "fsdp"),
+    "wi": ("fsdp", "model_ffn"),
+    "wg": ("fsdp", "model_ffn"),
+    "wu": ("fsdp", "model_ffn"),
+    "wd": ("model_ffn", "fsdp"),
+    "router": ("fsdp", None),
+    "in_proj": ("fsdp", "d_inner"),
+    "out_proj": ("d_inner", "fsdp"),
+    "conv_w": (None, None),
+    "conv_b": (None,),
+    "A_log": ("ssm_heads",),
+    "D": ("ssm_heads",),
+    "dt_bias": ("ssm_heads",),
+    "down": ("fsdp", None),
+}
+_MOE_OVERRIDES: dict[str, tuple] = {
+    "wg": ("experts", "fsdp", "model_ffe"),
+    "wu": ("experts", "fsdp", "model_ffe"),
+    "wd": ("experts", "model_ffe", "fsdp"),
+}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def param_specs(cfg: ArchConfig, shapes: Params, mesh: Mesh,
+                options: dict | None = None) -> Params:
+    """PartitionSpec pytree matching the param pytree."""
+    rules = make_rules(cfg, mesh, options)
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        table = _LEAF_RULES
+        if "moe" in names and "shared" not in names and name in _MOE_OVERRIDES:
+            table = _MOE_OVERRIDES
+        logical = table.get(name)
+        if logical is None:
+            return P()                                # norms, scalars: replicate
+        shape = leaf.shape
+        pad = len(shape) - len(logical)
+        if pad < 0:
+            logical = logical[-len(shape):]
+            pad = 0
+        logical = (None,) * pad + tuple(logical)
+        return spec_of(logical, rules, shape=shape, mesh=mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, shapes)
+
+
+def cache_pspecs(cfg: ArchConfig, shapes: Params, mesh: Mesh,
+                 options: dict | None = None) -> Params:
+    """KV/state cache sharding cascade: kv heads when divisible; else
+    head_dim (q is tiny to reshard, scores psum over hd shards); else the
+    sequence dim rides the model axis."""
+    rules = make_rules(cfg, mesh, options)
+    model = rules.get("model")
+    msize = mesh.shape["model"] if model is not None else 1
+
+    def leaf_spec(path, leaf):
+        name = _path_names(path)[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+            # (L_or_G, B, S, KV, hd)
+            logical = (None, "batch", None, "kv", None)
+            spec = list(spec_of(logical, rules, shape=leaf.shape, mesh=mesh))
+            if model is not None and spec[3] is None:
+                if leaf.shape[4] % msize == 0:
+                    spec[4] = model                      # head_dim shards
+                elif leaf.shape[2] % msize == 0:
+                    spec[2] = model                      # seq shards
+            return P(*spec)
+        if name == "state":               # (L, B, H, P, N)
+            return spec_of((None, "batch", "ssm_heads", None, None), rules,
+                           shape=leaf.shape, mesh=mesh)
+        if name == "conv":                # (L, B, W-1, conv_ch)
+            return spec_of((None, "batch", None, None), rules,
+                           shape=leaf.shape, mesh=mesh)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, shapes)
+
+
+def batch_pspecs(cfg: ArchConfig, batch_shapes: dict, mesh: Mesh,
+                 options: dict | None = None) -> dict:
+    rules = make_rules(cfg, mesh, options)
+    out = {}
+    for k, v in batch_shapes.items():
+        nd = len(v.shape)
+        if k == "position":
+            out[k] = P()
+        elif nd >= 1:
+            out[k] = spec_of(("batch",) + (None,) * (nd - 1), rules,
+                             shape=v.shape, mesh=mesh)
+        else:
+            out[k] = P()
+    return out

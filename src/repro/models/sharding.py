@@ -1,0 +1,215 @@
+"""Logical-axis sharding: rules, divisibility cascade, activation constraints.
+
+Weights and activations are annotated with *logical* axis names; a rule table
+maps them onto mesh axes with divisibility checks (e.g. gemma's 8 query heads
+cannot shard over a 16-way ``model`` axis, so attention falls back to
+sharding ``head_dim`` — 256 lanes — instead; whisper's 12 heads likewise).
+
+``set_mesh_context`` installs a (mesh, rules) pair consulted by
+:func:`constrain` inside model code — a no-op when unset so smoke tests run
+unsharded on one CPU device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+_local = threading.local()
+
+
+def _mesh_axis_size(mesh: Mesh, axis: str | tuple[str, ...]) -> int:
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    n = 1
+    for a in axis:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(dim: int, mesh: Mesh, axis: str | tuple[str, ...] | None) -> bool:
+    if axis is None:
+        return True
+    return dim % _mesh_axis_size(mesh, axis) == 0
+
+
+DEFAULT_OPTIONS: dict[str, Any] = {
+    # what to do when query heads don't divide the model axis:
+    #   "replicate" — attention weights replicate over `model` (FSDP on
+    #                 `data` still shards storage); attention compute is
+    #                 local, zero attention collectives.  [optimized default]
+    #   "head_dim"  — contraction-shard head_dim; QK^T/PV carry a psum of
+    #                 the score tensor per KV chunk.      [paper-baseline]
+    "attn_fallback": "replicate",
+    # MoE dispatch scope: True = sort/capacity per batch-shard group (all
+    # routing ops SPMD-local); False = one global sort (baseline).
+    "moe_local_dispatch": True,
+    # "tp2d" (default): data×model 2D layout. "fsdp": pure ZeRO-3 — batch
+    # spans every mesh axis whose prefix product divides global_batch,
+    # weights fully sharded over those axes, NO tensor parallelism (zero
+    # activation collectives; weight all-gathers + grad reduce-scatters
+    # only). Wins for dense train shapes with per-chip batch >= 1.
+    "layout": "tp2d",
+    "global_batch": None,            # consulted by the fsdp layout
+}
+
+
+def make_rules(cfg: ArchConfig, mesh: Mesh,
+               options: dict[str, Any] | None = None) -> dict[str, Any]:
+    """Concrete logical-axis → mesh-axis assignment for this arch × mesh.
+
+    The attention cascade: shard query heads on ``model`` when divisible,
+    otherwise fall back per ``options['attn_fallback']`` (see
+    DEFAULT_OPTIONS; the head_dim mode is kept selectable because it is the
+    §Perf baseline).
+    """
+    opts = dict(DEFAULT_OPTIONS)
+    if options:
+        opts.update(options)
+    axes = mesh.axis_names
+    dp: tuple[str, ...] = tuple(a for a in ("pod", "data") if a in axes)
+    model = "model" if "model" in axes else None
+    hd = cfg.resolved_head_dim
+
+    rules: dict[str, Any] = {
+        "batch": dp if dp else None,
+        "fsdp": "data" if "data" in axes else None,
+        "model": model,
+        "heads": None, "kv": None, "head_dim": None,
+        "moe_local_dispatch": bool(opts["moe_local_dispatch"]),
+        "attn_fallback": opts["attn_fallback"],
+    }
+    if model is not None:
+        msize = mesh.shape[model]
+        if cfg.eff_heads and cfg.eff_heads % msize == 0:
+            rules["heads"] = model
+            if cfg.eff_kv and cfg.eff_kv % msize == 0:
+                rules["kv"] = model
+            # else: kv replicated (GQA with few kv heads) — q-sharded mode
+        elif (cfg.num_heads and opts["attn_fallback"] == "head_dim"
+              and hd % msize == 0):
+            rules["head_dim"] = model          # contraction-sharded attention
+        if cfg.d_ff and cfg.d_ff % msize != 0:
+            rules["model_ffn"] = None
+        else:
+            rules["model_ffn"] = model
+        rules["vocab"] = model if cfg.padded_vocab % msize == 0 else None
+        if cfg.moe is not None:
+            rules["experts"] = model if cfg.moe.num_experts % msize == 0 else None
+            rules["model_ffe"] = (model if cfg.moe.d_ff_expert % msize == 0
+                                  and rules.get("experts") is None else None)
+        if cfg.ssm is not None:
+            d_in = cfg.ssm.expand * cfg.d_model
+            nheads = d_in // cfg.ssm.head_dim
+            rules["ssm_heads"] = model if nheads % msize == 0 else None
+            rules["d_inner"] = model if d_in % msize == 0 else None
+        # residual-stream activation sharding (megatron-SP style): saves
+        # (L × B × S × D) checkpointed activations sharded over model
+        rules["residual"] = model if cfg.d_model % msize == 0 else None
+    else:
+        rules["model_ffn"] = None
+        rules["vocab"] = None
+        rules["residual"] = None
+        if cfg.moe is not None:
+            rules["experts"] = None
+            rules["model_ffe"] = None
+        if cfg.ssm is not None:
+            rules["ssm_heads"] = None
+            rules["d_inner"] = None
+
+    # -- pure-FSDP / ZeRO-3 layout override --------------------------------
+    if opts.get("layout") == "fsdp":
+        gb = opts.get("global_batch")
+        chosen: list[str] = []
+        prod = 1
+        for a in ("pod", "data", "model"):
+            if a not in axes:
+                continue
+            nxt = prod * mesh.shape[a]
+            if gb is not None and gb % nxt != 0:
+                break
+            chosen.append(a)
+            prod = nxt
+        shard_axes = tuple(chosen) if chosen else (dp or None)
+        rules["batch"] = shard_axes
+        rules["fsdp"] = shard_axes
+        for k in ("heads", "kv", "head_dim", "model_ffn", "vocab",
+                  "residual", "experts", "model_ffe", "ssm_heads", "d_inner"):
+            if k in rules:
+                rules[k] = None
+        rules["layout"] = "fsdp"
+
+    return rules
+
+
+def spec_of(logical: Sequence[str | None], rules: Mapping[str, Any],
+            shape: Sequence[int] | None = None,
+            mesh: Mesh | None = None) -> P:
+    """Map logical axis names to a PartitionSpec (with divisibility guard
+    when shape+mesh provided)."""
+    out = []
+    for i, name in enumerate(logical):
+        if name is None:
+            out.append(None)
+            continue
+        axis = rules.get(name)
+        if axis is None:
+            out.append(None)
+            continue
+        if shape is not None and mesh is not None and not _fits(shape[i], mesh, axis):
+            out.append(None)
+            continue
+        out.append(axis)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# activation-constraint context
+# ---------------------------------------------------------------------------
+
+
+def set_mesh_context(mesh: Mesh | None, rules: Mapping[str, Any] | None) -> None:
+    _local.mesh = mesh
+    _local.rules = rules
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, rules: Mapping[str, Any]):
+    prev = (getattr(_local, "mesh", None), getattr(_local, "rules", None))
+    set_mesh_context(mesh, rules)
+    try:
+        yield
+    finally:
+        set_mesh_context(*prev)
+
+
+def dispatch_groups() -> int:
+    """MoE local-dispatch group count = number of batch shards (1 when no
+    mesh context or local dispatch disabled — CPU smoke tests)."""
+    mesh = getattr(_local, "mesh", None)
+    rules = getattr(_local, "rules", None)
+    if mesh is None or rules is None or not rules.get("moe_local_dispatch"):
+        return 1
+    batch = rules.get("batch")
+    if not batch:
+        return 1
+    axes = (batch,) if isinstance(batch, str) else batch
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x: jax.Array, logical: Sequence[str | None]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without context."""
+    mesh = getattr(_local, "mesh", None)
+    rules = getattr(_local, "rules", None)
+    if mesh is None or rules is None:
+        return x
+    spec = spec_of(logical, rules, shape=x.shape, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

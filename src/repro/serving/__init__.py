@@ -1,0 +1,1 @@
+from .batcher import Batcher, Completion, Request, completions_to_batch  # noqa: F401

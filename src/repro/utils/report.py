@@ -1,0 +1,84 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from dryrun artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_artifacts(art_dir: str = "artifacts/dryrun") -> list[dict]:
+    arts = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(p) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def mesh_tag(art: dict) -> str:
+    return "x".join(str(v) for v in art["mesh"].values())
+
+
+def roofline_table(arts: list[dict], mesh: str) -> str:
+    rows = ["| arch | shape | fits | peak GiB/dev | C (ms) | M (ms) | "
+            "M fused (ms) | X (ms) | bottleneck | useful | MFU bound | "
+            "one-line lever |",
+            "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    levers = {
+        "collective": "cut TP activation/weight gathers (layout or replication)",
+        "memory": "fuse attention interior into VMEM (Pallas splash) / smaller dtype",
+        "compute": "already MXU-bound: raise per-chip batch or quit early",
+    }
+    for a in arts:
+        if mesh_tag(a) != mesh:
+            continue
+        if a["status"] == "skipped":
+            rows.append(f"| {a['arch']} | {a['shape']} | — | — | — | — | — | "
+                        f"— | skipped | — | — | {a['skip_reason']} |")
+            continue
+        if a["status"] == "error":
+            rows.append(f"| {a['arch']} | {a['shape']} | — | — | — | — | — | "
+                        f"— | ERROR | — | — | {a['error'][:60]} |")
+            continue
+        r = a["roofline"]
+        rf = a.get("roofline_fused", r)
+        m = a["memory"]
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | "
+            f"{'✓' if m.get('fits_hbm') else '✗'} | "
+            f"{m['peak_bytes_per_device']/2**30:.2f} | "
+            f"{r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} | "
+            f"{rf['memory_s']*1e3:.1f} | "
+            f"{r['collective_s']*1e3:.1f} | {rf['bottleneck']} | "
+            f"{r['useful_flops_ratio']:.2f} | {rf['mfu_bound']:.3f} | "
+            f"{levers[rf['bottleneck']]} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(arts: list[dict], mesh: str) -> str:
+    rows = ["| arch | shape | status | compile s | args GiB | temp GiB | "
+            "flops/dev | bytes/dev | collectives (count) | wire MiB/dev |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for a in arts:
+        if mesh_tag(a) != mesh:
+            continue
+        if a["status"] != "ok":
+            rows.append(f"| {a['arch']} | {a['shape']} | {a['status']} | — | — "
+                        f"| — | — | — | — | — |")
+            continue
+        lc = a["loop_cost"]
+        counts = ", ".join(f"{k}:{int(v)}" for k, v in
+                           sorted(lc["collective_counts"].items()))
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | ok | {a['compile_s']:.0f} | "
+            f"{a['memory']['argument_bytes']/2**30:.2f} | "
+            f"{a['memory']['temp_bytes']/2**30:.2f} | "
+            f"{lc['flops']:.2e} | {lc['bytes']:.2e} | {counts} | "
+            f"{lc['collective_wire_bytes']/2**20:.0f} |")
+    return "\n".join(rows)
+
+
+def summary_stats(arts: list[dict]) -> dict:
+    ok = sum(1 for a in arts if a["status"] == "ok")
+    skip = sum(1 for a in arts if a["status"] == "skipped")
+    err = sum(1 for a in arts if a["status"] == "error")
+    return {"ok": ok, "skipped": skip, "errors": err, "total": len(arts)}

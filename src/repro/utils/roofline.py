@@ -1,0 +1,88 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_wire_bytes_per_device / link_bw
+
+``cost_analysis()`` on the partitioned module reports *per-device* flops and
+bytes; the collective bytes come from the ring-model HLO parse
+(:mod:`repro.utils.hlo`). MODEL_FLOPS uses the 6·N·D (train) / 2·N·D
+(inference) convention with N_active for MoE.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_per_device: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        if self.flops_per_device == 0:
+            return 0.0
+        return self.model_flops_per_device / self.flops_per_device
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization the roofline permits (useful work over
+        peak at the bottleneck-dictated step time)."""
+        if self.step_s == 0:
+            return 0.0
+        return self.model_flops_per_device / (self.step_s * PEAK_FLOPS)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops_per_device": self.model_flops_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_s": self.step_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops(num_params: int, tokens: int, kind: str) -> float:
+    """6·N·D for training (fwd+bwd), 2·N·D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * num_params * tokens

@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches run on the single real CPU device; ONLY the
+# dry-run entry point (repro.launch.dryrun) forces 512 placeholder devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,94 @@
+"""Query engine vs numpy oracle."""
+import numpy as np
+import pytest
+
+from repro.engine import Engine, make_mixed_table, make_numeric_table, parse
+from repro.core.recordbatch import concat_batches
+
+
+@pytest.fixture
+def eng():
+    e = Engine()
+    e.register("/d/wide", make_numeric_table("wide", 20_000, 5, batch_rows=4096,
+                                             seed=3))
+    e.register("/d/mixed", make_mixed_table("mixed", 5_000, seed=3))
+    return e
+
+
+def _all(eng, sql, path):
+    return concat_batches(eng.execute(sql, path).read_all())
+
+
+def _col(eng, path, name):
+    t = eng.catalog.get(path)
+    return np.concatenate([b.column(name).values for b in t.batches])
+
+
+def test_projection(eng):
+    out = _all(eng, "SELECT c3, c1 FROM wide", "/d/wide")
+    assert out.schema.names == ("c3", "c1")
+    np.testing.assert_allclose(out.column("c3").values, _col(eng, "/d/wide", "c3"))
+
+
+def test_filter_matches_numpy(eng):
+    out = _all(eng, "SELECT c0 FROM wide WHERE c0 > 0.25 AND c1 < 0.5", "/d/wide")
+    c0, c1 = _col(eng, "/d/wide", "c0"), _col(eng, "/d/wide", "c1")
+    expect = c0[(c0 > 0.25) & (c1 < 0.5)]
+    np.testing.assert_allclose(np.sort(out.column("c0").values), np.sort(expect))
+
+
+def test_arithmetic_expr(eng):
+    out = _all(eng, "SELECT c0 FROM wide WHERE c0 * 2 + 1 >= 2.0", "/d/wide")
+    c0 = _col(eng, "/d/wide", "c0")
+    assert out.num_rows == int(((c0 * 2 + 1) >= 2.0).sum())
+
+
+def test_limit_and_or(eng):
+    out = _all(eng, "SELECT c0 FROM wide WHERE c0 > 1 OR c0 < -1 LIMIT 100",
+               "/d/wide")
+    assert out.num_rows == 100
+    v = out.column("c0").values
+    assert ((v > 1) | (v < -1)).all()
+
+
+def test_aggregates_match_numpy(eng):
+    out = _all(eng, "SELECT count(*), sum(c2), min(c2), max(c2), avg(c2) "
+                    "FROM wide", "/d/wide").to_pydict()
+    c2 = _col(eng, "/d/wide", "c2")
+    assert out["count(*)"] == [20_000]
+    np.testing.assert_allclose(out["sum(c2)"][0], c2.sum(), rtol=1e-12)
+    np.testing.assert_allclose(out["min(c2)"][0], c2.min())
+    np.testing.assert_allclose(out["max(c2)"][0], c2.max())
+    np.testing.assert_allclose(out["avg(c2)"][0], c2.mean(), rtol=1e-12)
+
+
+def test_null_semantics(eng):
+    """NULL comparisons never pass WHERE (SQL three-valued logic)."""
+    out = _all(eng, "SELECT val FROM mixed WHERE val > 0", "/d/mixed")
+    assert out.column("val").null_count() == 0
+    out2 = _all(eng, "SELECT id FROM mixed WHERE val IS NULL", "/d/mixed")
+    t = eng.catalog.get("/d/mixed")
+    nulls = sum(b.column("val").null_count() for b in t.batches)
+    assert out2.num_rows == nulls
+
+
+def test_string_filter(eng):
+    out = _all(eng, "SELECT tag FROM mixed WHERE tag = 'beta' LIMIT 7",
+               "/d/mixed")
+    assert out.to_pydict()["tag"] == ["beta"] * 7
+
+
+def test_is_not_null(eng):
+    out = _all(eng, "SELECT tag FROM mixed WHERE tag IS NOT NULL", "/d/mixed")
+    assert out.column("tag").null_count() == 0
+
+
+def test_parser_errors():
+    with pytest.raises(ValueError):
+        parse("SELECT FROM t")
+    with pytest.raises(ValueError):
+        parse("SELECT a FROM t WHERE")
+    with pytest.raises(ValueError):
+        parse("SELECT a FROM t LIMIT x")
+    q = parse("select sum(a), count(*) from t where (a + 1) * 2 = 4 limit 3")
+    assert q.is_aggregate and q.limit == 3

@@ -1,0 +1,98 @@
+"""Hypothesis property tests for the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Fabric, RpcTransport, ThallusTransport,
+                        batch_from_pydict, pack, schema, unpack,
+                        pack_validity, unpack_validity, expose_batch,
+                        allocate_like, assemble_batch)
+from repro.kernels.pack import pack_segments, unpack_segments
+from repro.engine import Engine, make_numeric_table
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+_ints = st.one_of(st.none(), st.integers(-2**40, 2**40))
+_floats = st.one_of(st.none(), st.floats(allow_nan=False, allow_infinity=False,
+                                         width=32))
+_strs = st.one_of(st.none(), st.text(max_size=12))
+
+
+@st.composite
+def batches(draw):
+    n = draw(st.integers(1, 40))
+    data = {
+        "i": draw(st.lists(_ints, min_size=n, max_size=n)),
+        "f": draw(st.lists(_floats, min_size=n, max_size=n)),
+        "s": draw(st.lists(_strs, min_size=n, max_size=n)),
+    }
+    sch = schema(("i", "int64"), ("f", "float32"), ("s", "utf8"))
+    return batch_from_pydict(sch, data)
+
+
+# ---------------------------------------------------------------------------
+# invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(batches())
+def test_serialize_roundtrip_any_batch(batch):
+    assert unpack(pack(batch)).to_pydict() == batch.to_pydict()
+
+
+@settings(max_examples=40, deadline=None)
+@given(batches())
+def test_transports_agree_any_batch(batch):
+    fabric = Fabric()
+    rpc_out, _ = RpcTransport(fabric).send_batch(batch)
+    th_out, th_stats = ThallusTransport(fabric).send_batch(batch)
+    assert rpc_out.to_pydict() == th_out.to_pydict() == batch.to_pydict()
+    assert th_stats.serialize_s == 0.0          # zero-copy invariant
+
+
+@settings(max_examples=40, deadline=None)
+@given(batches())
+def test_bulk_expose_assemble_roundtrip(batch):
+    remote = expose_batch(batch)
+    local = allocate_like(remote.descs)
+    for s, d in zip(remote.segments, local.segments):
+        if s.nbytes:
+            d.view(np.uint8).reshape(-1)[:] = s.view(np.uint8).reshape(-1)
+    out = assemble_batch(batch.schema, batch.num_rows, local.segments)
+    assert out.to_pydict() == batch.to_pydict()
+    # conservation: RDMA'd bytes == batch payload bytes
+    assert remote.total_bytes == batch.nbytes
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 300), min_size=1, max_size=8),
+       st.integers(0, 2**32 - 1))
+def test_pack_kernel_roundtrip_any_segments(lens, seed):
+    rng = np.random.default_rng(seed)
+    segs = [rng.integers(0, 256, n).astype(np.uint8) for n in lens]
+    packed, out_lens = pack_segments(segs)
+    outs = unpack_segments(packed, out_lens)
+    for s, o in zip(segs, outs):
+        np.testing.assert_array_equal(s, o)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 500), st.integers(0, 2**32 - 1))
+def test_validity_roundtrip(n, seed):
+    mask = np.random.default_rng(seed).integers(0, 2, n).astype(bool)
+    assert (unpack_validity(pack_validity(mask), n) == mask).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(-2.0, 2.0), st.integers(1, 4))
+def test_engine_filter_conservation(threshold, ncols):
+    """rows(WHERE c0 > t) + rows(WHERE NOT c0 > t) == rows (null-free)."""
+    eng = Engine()
+    eng.register("/t", make_numeric_table("t", 2000, ncols, batch_rows=512))
+    a = sum(b.num_rows for b in
+            eng.execute(f"SELECT c0 FROM t WHERE c0 > {threshold}", "/t").read_all())
+    b = sum(b.num_rows for b in
+            eng.execute(f"SELECT c0 FROM t WHERE NOT c0 > {threshold}", "/t").read_all())
+    assert a + b == 2000

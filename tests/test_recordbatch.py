@@ -1,0 +1,78 @@
+"""Columnar layer: batches, bitmaps, slicing, zero-copy guarantees."""
+import numpy as np
+import pytest
+
+from repro.core import (Column, Field, RecordBatch, batch_from_arrays,
+                        batch_from_pydict, concat_batches, pack_validity,
+                        schema, unpack_validity)
+
+
+@pytest.fixture
+def mixed_batch():
+    sch = schema(("id", "int64"), ("x", "float32"), ("name", "utf8"),
+                 ("flag", "bool"))
+    return batch_from_pydict(sch, {
+        "id": [1, 2, None, 4, 5],
+        "x": [0.5, None, 2.5, 3.5, None],
+        "name": ["a", "bb", None, "dddd", ""],
+        "flag": [True, False, True, None, False],
+    })
+
+
+def test_roundtrip_pydict(mixed_batch):
+    d = mixed_batch.to_pydict()
+    assert d["id"] == [1, 2, None, 4, 5]
+    assert d["name"] == ["a", "bb", None, "dddd", ""]
+    assert mixed_batch.num_rows == 5
+    assert mixed_batch.num_columns == 4
+
+
+def test_validity_bitmap_roundtrip(rng):
+    for n in (1, 7, 8, 9, 64, 1000):
+        mask = rng.integers(0, 2, n).astype(bool)
+        np.testing.assert_array_equal(unpack_validity(pack_validity(mask), n),
+                                      mask)
+
+
+def test_null_counts(mixed_batch):
+    assert [c.null_count() for c in mixed_batch] == [1, 2, 1, 1]
+
+
+def test_select_is_zero_copy(mixed_batch):
+    proj = mixed_batch.select(["x", "id"])
+    assert proj.schema.names == ("x", "id")
+    assert proj.column("x").values is mixed_batch.column("x").values
+    assert proj.column("id").values is mixed_batch.column("id").values
+
+
+def test_slice_fixed_width_is_view(mixed_batch):
+    sl = mixed_batch.slice(1, 3)
+    assert sl.num_rows == 3
+    assert sl.column("id").values.base is not None  # numpy view
+    assert sl.to_pydict()["id"] == [2, None, 4]
+    assert sl.to_pydict()["name"] == ["bb", None, "dddd"]
+
+
+def test_take_varlen(mixed_batch):
+    out = mixed_batch.take(np.array([4, 3, 0]))
+    assert out.to_pydict()["name"] == ["", "dddd", "a"]
+    assert out.to_pydict()["id"] == [5, 4, 1]
+
+
+def test_concat(mixed_batch):
+    both = concat_batches([mixed_batch, mixed_batch.slice(0, 2)])
+    assert both.num_rows == 7
+    assert both.to_pydict()["name"][-2:] == ["a", "bb"]
+
+
+def test_ragged_rejected():
+    f1, f2 = Field("a", "int32"), Field("b", "int32")
+    with pytest.raises(ValueError, match="ragged"):
+        RecordBatch(schema(("a", "int32"), ("b", "int32")), (
+            Column(f1, np.zeros(3, np.int32)),
+            Column(f2, np.zeros(4, np.int32))))
+
+
+def test_batch_from_arrays_rejects_varlen():
+    with pytest.raises(ValueError):
+        batch_from_arrays(schema(("s", "utf8")), [np.zeros(3, np.uint8)])

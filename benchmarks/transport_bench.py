@@ -1,14 +1,39 @@
-"""Paper Fig. 2: data transport duration, Thallus vs Thallium RPC, across
+"""Paper Fig. 2 + the cluster dataplane axis.
+
+Fig. 2: data transport duration, Thallus vs Thallium RPC, across
 column-selectivity (result-set size). Expect up to ~5.5× and a gain that
-shrinks as the result set shrinks (constant RDMA setup costs dominate)."""
+shrinks as the result set shrinks (constant RDMA setup costs dominate).
+
+Cluster axis (streams × pool): the same bytes pulled through
+``repro.cluster`` — 1 stream vs N sharded streams, registered buffer pool
+off vs on. Every cluster row is decomposed from the same
+:class:`ClusterStats` path: ``us_per_call`` is the modeled critical path
+(slowest stream), and ``derived`` carries the measured ``alloc_us`` and the
+modeled registration cost the pool amortizes.
+
+Runnable standalone::
+
+    PYTHONPATH=src python benchmarks/transport_bench.py --transport thallus
+"""
 from __future__ import annotations
 
-from repro.core import RpcClient, ThallusClient, ThallusServer
+import argparse
+import os
+import sys
+
+if __package__ in (None, ""):          # `python benchmarks/transport_bench.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.common import Row, calibrated_fabric
+else:
+    from .common import Row, calibrated_fabric
+
+from repro.cluster import BufferPool, ClusterCoordinator, cluster_scan
+from repro.core import Fabric, RpcClient, ThallusClient, ThallusServer
 from repro.engine import Engine, make_numeric_table
 
-from .common import Row, calibrated_fabric
-
 TOTAL_COLS = 8
+CLUSTER_ROWS = 1 << 20
+CLUSTER_BATCH_ROWS = 1 << 15
 
 
 def _server(nrows: int) -> ThallusServer:
@@ -18,7 +43,7 @@ def _server(nrows: int) -> ThallusServer:
     return ThallusServer(eng, calibrated_fabric())
 
 
-def run() -> list[Row]:
+def run(transport: str = "both") -> list[Row]:
     rows: list[Row] = []
     # -- column-selectivity sweep at a large result set (Fig 2 shape) -------
     for nrows, tag in ((1 << 20, "1M"), (1 << 14, "16k"), (1 << 10, "1k")):
@@ -34,8 +59,62 @@ def run() -> list[Row]:
                     ts.append(c.transport_seconds())
                 return sorted(ts)[1]
 
+            if transport != "both":   # single-transport run: no speedup col
+                cls = RpcClient if transport == "rpc" else ThallusClient
+                rows.append(Row(f"transport_rows{tag}_cols{ncols}",
+                                med(cls) * 1e6, f"transport={transport}"))
+                continue
             t_rpc, t_th = med(RpcClient), med(ThallusClient)
             rows.append(Row(
                 f"transport_rows{tag}_cols{ncols}", t_th * 1e6,
                 f"speedup={t_rpc / t_th:.2f}x rpc_us={t_rpc*1e6:.1f}"))
+    if transport != "rpc":
+        rows.extend(run_cluster())
     return rows
+
+
+def run_cluster() -> list[Row]:
+    """Streams × pool sweep over the same total bytes (sharded table)."""
+    base_cfg = calibrated_fabric().config
+    table = make_numeric_table("t", CLUSTER_ROWS, TOTAL_COLS,
+                               batch_rows=CLUSTER_BATCH_ROWS)
+    sql = "SELECT " + ", ".join(f"c{i}" for i in range(TOTAL_COLS)) + " FROM t"
+    rows: list[Row] = []
+    for streams, pooled in ((1, False), (4, False), (4, True), (8, True)):
+        coordinator = ClusterCoordinator()
+        for i in range(streams):
+            coordinator.add_server(f"s{i}", ThallusServer(Engine(),
+                                                          Fabric(base_cfg)))
+        coordinator.place_shards("/d", table)
+        pool = (BufferPool(coordinator.server("s0").fabric)
+                if pooled else None)
+        stats = cluster_scan(coordinator, sql, "/d", pool=pool)
+        derived = (f"streams={streams} pool={'on' if pooled else 'off'} "
+                   f"batches={stats.batches} "
+                   f"bytes={stats.bytes} "
+                   f"alloc_us={stats.alloc_s*1e6:.1f} "
+                   f"reg_us={stats.modeled_register_s*1e6:.1f} "
+                   f"wire_us={stats.modeled_wire_s*1e6:.1f} "
+                   f"work_us={stats.sum_total_s*1e6:.1f}")
+        if pool is not None:
+            derived += f" pool_hit={pool.stats.hit_rate:.2f}"
+        rows.append(Row(f"cluster_streams{streams}_pool{int(pooled)}",
+                        stats.critical_path_s * 1e6, derived))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--transport", choices=("rpc", "thallus", "both"),
+                    default="both")
+    ap.add_argument("--cluster-only", action="store_true",
+                    help="skip the Fig-2 sweep, print only the cluster axis")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    rows = run_cluster() if args.cluster_only else run(args.transport)
+    for row in rows:
+        print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

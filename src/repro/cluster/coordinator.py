@@ -1,0 +1,125 @@
+"""Cluster coordinator: server/endpoint registry, dataset placement, lease
+reclamation, and stream resume.
+
+The coordinator is the control-plane brain the dataplane modules lean on:
+
+* **registry** — server_id → :class:`ThallusServer`, plus a record of which
+  datasets live where and how (``shard`` vs ``replica`` placement);
+* **placement** — :meth:`place_shards` splits a table's batches round-robin
+  across servers under one dataset path (disjoint shards);
+  :meth:`place_replicas` registers a full copy everywhere;
+* **planning** — :meth:`plan` delegates to :func:`repro.cluster.plan.plan_scan`
+  with the recorded placement;
+* **lease lifecycle** — :meth:`open_stream` / :meth:`resume_stream` /
+  :meth:`close_stream` wrap ``init_scan``/``finalize``, and
+  :meth:`reclaim_stale` sweeps every server's reader map (activity-based, so
+  live streams survive the sweep).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.protocol import ScanHandle, ThallusServer
+from ..engine.table import Table
+from .plan import Endpoint, ScanPlan, plan_scan
+
+
+@dataclasses.dataclass
+class _Placement:
+    mode: str                      # "shard" | "replica"
+    server_ids: tuple[str, ...]
+
+
+class ClusterCoordinator:
+    """Registry + lease lifecycle for a set of Thallus servers."""
+
+    def __init__(self) -> None:
+        self.servers: dict[str, ThallusServer] = {}
+        self._placements: dict[str, _Placement] = {}
+
+    # ------------------------------------------------------------ registry
+    def add_server(self, server_id: str, server: ThallusServer) -> None:
+        if server_id in self.servers:
+            raise ValueError(f"server id {server_id!r} already registered")
+        self.servers[server_id] = server
+
+    def server(self, server_id: str) -> ThallusServer:
+        if server_id not in self.servers:
+            raise KeyError(f"unknown server {server_id!r}")
+        return self.servers[server_id]
+
+    def hosts(self, dataset: str) -> dict[str, ThallusServer]:
+        """Which servers host ``dataset``. Uses the recorded placement when
+        one exists, otherwise falls back to probing server catalogs."""
+        placement = self._placements.get(dataset)
+        if placement is not None:
+            return {sid: self.servers[sid] for sid in placement.server_ids}
+        found = {}
+        for sid, server in self.servers.items():
+            catalog = getattr(server.engine, "catalog", None)
+            if catalog is not None and dataset in catalog:
+                found[sid] = server
+        return found
+
+    def placement_mode(self, dataset: str) -> str:
+        placement = self._placements.get(dataset)
+        return placement.mode if placement is not None else "shard"
+
+    # ----------------------------------------------------------- placement
+    def place_shards(self, dataset: str, table: Table,
+                     server_ids: list[str] | None = None) -> None:
+        """Split ``table``'s batches round-robin into disjoint shards, one
+        per server, all registered under the same dataset path."""
+        ids = sorted(server_ids or self.servers)
+        if not ids:
+            raise ValueError("no servers to place shards on")
+        for i, sid in enumerate(ids):
+            shard = Table(table.name, table.schema,
+                          batches=table.batches[i::len(ids)])
+            self.server(sid).engine.register(dataset, shard)
+        self._placements[dataset] = _Placement("shard", tuple(ids))
+
+    def place_replicas(self, dataset: str, table: Table,
+                       server_ids: list[str] | None = None) -> None:
+        """Register a full copy of ``table`` on every server."""
+        ids = sorted(server_ids or self.servers)
+        if not ids:
+            raise ValueError("no servers to place replicas on")
+        for sid in ids:
+            self.server(sid).engine.register(dataset, table)
+        self._placements[dataset] = _Placement("replica", tuple(ids))
+
+    # ------------------------------------------------------------ planning
+    def plan(self, sql: str, dataset: str,
+             num_streams: int | None = None,
+             placement: str | None = None) -> ScanPlan:
+        hosts = self.hosts(dataset)
+        if not hosts:
+            raise KeyError(f"no server hosts dataset {dataset!r}")
+        mode = placement or self.placement_mode(dataset)
+        return plan_scan(sql, dataset, hosts, placement=mode,
+                         num_streams=num_streams)
+
+    # ------------------------------------------------- stream lease lifecycle
+    def open_stream(self, endpoint: Endpoint) -> ScanHandle:
+        server = self.server(endpoint.server_id)
+        return server.init_scan(endpoint.sql, endpoint.dataset,
+                                start_batch=endpoint.start_batch)
+
+    def resume_stream(self, endpoint: Endpoint, delivered: int) -> ScanHandle:
+        """Restart one failed stream where it died: a fresh ``init_scan``
+        fast-forwarded past the batches the stream already delivered."""
+        server = self.server(endpoint.server_id)
+        return server.init_scan(
+            endpoint.sql, endpoint.dataset,
+            start_batch=endpoint.start_batch + delivered)
+
+    def close_stream(self, endpoint: Endpoint, uid: str) -> None:
+        server = self.server(endpoint.server_id)
+        if uid in server.reader_map:   # may already be reclaimed/evicted
+            server.finalize(uid)
+
+    def reclaim_stale(self, older_than_s: float) -> int:
+        """Sweep abandoned leases across the whole cluster."""
+        return sum(s.reclaim_stale(older_than_s)
+                   for s in self.servers.values())

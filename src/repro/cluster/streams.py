@@ -1,0 +1,292 @@
+"""Multi-stream puller: N concurrent resumable leases over one scan plan.
+
+Each :class:`Endpoint` of a :class:`~repro.cluster.plan.ScanPlan` becomes a
+:class:`StreamPuller` driving its own ``init_scan → iterate(lease) →
+finalize`` loop. A :class:`MultiStreamPuller` interleaves the pullers with
+bounded ``max_batches`` leases under one of two schedules:
+
+* ``round_robin`` — deterministic rotation (the loader uses this so resume
+  offsets are well-defined);
+* ``first_ready`` — always lease from the stream whose modeled clock is
+  furthest behind (first-ready-wins, the scheduling Arrow Flight clients use
+  to keep parallel endpoints drained evenly).
+
+Streams are independently fault-tolerant: an ``iterate`` that raises is
+resumed through the coordinator (``init_scan(start_batch=delivered)``) up to
+``max_resumes`` times, without disturbing the other streams.
+
+Because the wire is modeled (no NIC here), concurrency is modeled too: each
+stream accrues a **modeled clock** (its serial wire + measured client CPU
+time), and :attr:`ClusterStats.critical_path_s` — the cluster's transport
+duration — is the slowest stream's clock, while ``sum_total_s`` is the total
+work. Both come from the same per-batch stats, so benchmark decompositions
+for 1 stream and N streams share one code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Iterator
+
+from ..core import bulk as bulk_mod
+from ..core.recordbatch import RecordBatch
+from ..core.transport import TransportStats, rdma_pull_batch
+from .coordinator import ClusterCoordinator
+from .mempool import BufferPool, PoolStats
+from .plan import Endpoint, ScanPlan
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Per-stream fabric-level counters + timing decomposition."""
+
+    server_id: str = ""
+    batches: int = 0
+    bytes: int = 0
+    segments: int = 0
+    rdma_ops: int = 0
+    control_rpcs: int = 0
+    resumes: int = 0
+    alloc_s: float = 0.0            # measured: pool checkout or fresh alloc
+    deserialize_s: float = 0.0      # measured: zero-copy assembly
+    modeled_wire_s: float = 0.0
+    modeled_register_s: float = 0.0  # per-pull registration actually charged
+    clock_s: float = 0.0            # this stream's serial transport time
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    """Aggregate view over all streams of one partitioned scan."""
+
+    query_id: str = ""
+    placement: str = ""
+    streams: list[StreamStats] = dataclasses.field(default_factory=list)
+    pool: PoolStats | None = None
+
+    @property
+    def batches(self) -> int:
+        return sum(s.batches for s in self.streams)
+
+    @property
+    def bytes(self) -> int:
+        return sum(s.bytes for s in self.streams)
+
+    @property
+    def alloc_s(self) -> float:
+        return sum(s.alloc_s for s in self.streams)
+
+    @property
+    def deserialize_s(self) -> float:
+        return sum(s.deserialize_s for s in self.streams)
+
+    @property
+    def modeled_wire_s(self) -> float:
+        return sum(s.modeled_wire_s for s in self.streams)
+
+    @property
+    def modeled_register_s(self) -> float:
+        """Registration cost actually charged on pulls, plus the pool's
+        one-time slab pinning (amortized across every batch it served)."""
+        charged = sum(s.modeled_register_s for s in self.streams)
+        if self.pool is not None:
+            charged += self.pool.modeled_register_s
+        return charged
+
+    @property
+    def resumes(self) -> int:
+        return sum(s.resumes for s in self.streams)
+
+    @property
+    def sum_total_s(self) -> float:
+        """Total transport work across streams (serial equivalent)."""
+        return sum(s.clock_s for s in self.streams)
+
+    @property
+    def critical_path_s(self) -> float:
+        """Cluster transport duration: streams run concurrently, so the scan
+        finishes when the slowest stream does. Includes each stream's
+        measured client CPU time (alloc/assembly), so it is wall-clock-noisy;
+        use :attr:`modeled_critical_path_s` for deterministic comparisons."""
+        return max((s.clock_s for s in self.streams), default=0.0)
+
+    @property
+    def modeled_critical_path_s(self) -> float:
+        """Slowest stream by modeled wire time only — a pure function of
+        bytes/segments/ops, reproducible under any machine load."""
+        return max((s.modeled_wire_s for s in self.streams), default=0.0)
+
+
+class StreamPuller:
+    """One endpoint's resumable lease-driven pull loop."""
+
+    def __init__(self, coordinator: ClusterCoordinator, endpoint: Endpoint,
+                 pool: BufferPool | None = None, max_resumes: int = 3):
+        self.coordinator = coordinator
+        self.endpoint = endpoint
+        self.server = coordinator.server(endpoint.server_id)
+        self.pool = pool
+        self.max_resumes = max_resumes
+        self.stats = StreamStats(server_id=endpoint.server_id)
+        self.delivered = 0
+        self.drained = False
+        self._handle = coordinator.open_stream(endpoint)
+        self._lease_out: list[tuple[RecordBatch, bulk_mod.BulkHandle | None]] = []
+
+    # ------------------------------------------------------------- do_rdma
+    def _do_rdma(self, num_rows: int, sizes, remote: bulk_mod.BulkHandle
+                 ) -> TransportStats:
+        # pin=True (no-pool path): fault pages in, the per-batch cost
+        # registration pays and the pool amortizes
+        batch, local, stats = rdma_pull_batch(
+            self.server.fabric, self._handle.schema, num_rows, remote,
+            pool=self.pool, pin=True)
+        s = self.stats
+        s.batches += 1
+        s.bytes += stats.wire.bytes_moved
+        s.segments += stats.wire.num_segments
+        s.rdma_ops += 1
+        s.control_rpcs += 1
+        s.alloc_s += stats.alloc_s
+        s.deserialize_s += stats.deserialize_s
+        s.modeled_wire_s += stats.wire.modeled_wire_s
+        s.modeled_register_s += stats.wire.modeled_register_s
+        s.clock_s += stats.total_s
+        self._lease_out.append(
+            (batch, local if self.pool is not None else None))
+        return stats
+
+    # --------------------------------------------------------------- lease
+    def pull_lease(self, lease_batches: int
+                   ) -> list[tuple[RecordBatch, bulk_mod.BulkHandle | None]]:
+        """Pull up to ``lease_batches`` batches; empty list == drained.
+        Returns (batch, pooled_handle) pairs — the caller owns releasing the
+        handles back to the pool once the batch is consumed."""
+        if self.drained:
+            return []
+        if self.endpoint.max_batches is not None:
+            lease_batches = min(
+                lease_batches, self.endpoint.max_batches - self.delivered)
+            if lease_batches <= 0:
+                self._finish()
+                return []
+        self._lease_out = []
+        for attempt in range(self.max_resumes + 1):
+            try:
+                self.server.iterate(
+                    self._handle.uuid, self._do_rdma,
+                    max_batches=lease_batches - len(self._lease_out))
+                break
+            except Exception:
+                if attempt == self.max_resumes:
+                    raise
+                # resume just this stream where it died: batches that landed
+                # before the fault stay delivered, the lease pulls the rest
+                self.stats.resumes += 1
+                self._handle = self.coordinator.resume_stream(
+                    self.endpoint, self.delivered + len(self._lease_out))
+        self.delivered += len(self._lease_out)
+        if not self._lease_out:
+            self._finish()
+        return self._lease_out
+
+    def _finish(self) -> None:
+        if not self.drained:
+            self.drained = True
+            self.coordinator.close_stream(self.endpoint, self._handle.uuid)
+
+
+class MultiStreamPuller:
+    """Drive every endpoint of a plan with bounded leases."""
+
+    def __init__(self, coordinator: ClusterCoordinator, plan: ScanPlan,
+                 pool: BufferPool | None = None, lease_batches: int = 1,
+                 schedule: str = "round_robin", max_resumes: int = 3):
+        if schedule not in ("round_robin", "first_ready"):
+            raise ValueError(f"unknown schedule {schedule!r}")
+        self.plan = plan
+        self.pool = pool
+        self.lease_batches = lease_batches
+        self.schedule = schedule
+        self.pullers = [StreamPuller(coordinator, ep, pool=pool,
+                                     max_resumes=max_resumes)
+                        for ep in plan.endpoints]
+
+    # ----------------------------------------------------------- iteration
+    def batches(self) -> Iterator[tuple[int, RecordBatch]]:
+        """Yield ``(stream_index, batch)`` in schedule order.
+
+        With a pool, a yielded batch's buffers are recycled when iteration
+        resumes — consume or copy it before advancing (streaming contract)."""
+        pending: bulk_mod.BulkHandle | None = None
+        try:
+            for idx, batch, handle in self._drive():
+                if pending is not None:
+                    self.pool.release(pending)
+                pending = handle
+                yield idx, batch
+        finally:
+            if pending is not None:
+                self.pool.release(pending)
+
+    def run(self, sink: Callable[[int, RecordBatch], None] | None = None
+            ) -> ClusterStats:
+        """Drain every stream; optionally hand each batch to ``sink``."""
+        for idx, batch, handle in self._drive():
+            try:
+                if sink is not None:
+                    sink(idx, batch)
+            finally:
+                if handle is not None:
+                    self.pool.release(handle)
+        return self.stats()
+
+    def _drive(self) -> Iterator[tuple[int, RecordBatch,
+                                       bulk_mod.BulkHandle | None]]:
+        try:
+            if self.schedule == "round_robin":
+                active = list(range(len(self.pullers)))
+                while active:
+                    still = []
+                    for idx in active:
+                        yield from self._lease(idx)
+                        if not self.pullers[idx].drained:
+                            still.append(idx)
+                    active = still
+            else:  # first_ready: lease from the stream furthest behind
+                heap = [(0.0, idx) for idx in range(len(self.pullers))]
+                heapq.heapify(heap)
+                while heap:
+                    _, idx = heapq.heappop(heap)
+                    yield from self._lease(idx)
+                    if not self.pullers[idx].drained:
+                        heapq.heappush(
+                            heap, (self.pullers[idx].stats.clock_s, idx))
+        finally:
+            self._abandon()    # no-op on a fully drained run
+
+    def _lease(self, idx: int) -> Iterator[tuple[int, RecordBatch,
+                                                 bulk_mod.BulkHandle | None]]:
+        # pull_lease returns the puller's live _lease_out list; popping as we
+        # yield means anything still in it was never handed to the consumer
+        out = self.pullers[idx].pull_lease(self.lease_batches)
+        while out:
+            batch, handle = out.pop(0)
+            yield idx, batch, handle
+
+    def _abandon(self) -> None:
+        """Consumer walked away mid-scan: release pooled handles for batches
+        it never saw and finalize every still-open lease, so abandoned scans
+        don't leak slabs or reader-map entries."""
+        for puller in self.pullers:
+            for _, handle in puller._lease_out:
+                if handle is not None:
+                    self.pool.release(handle)
+            puller._lease_out = []
+            puller._finish()
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> ClusterStats:
+        return ClusterStats(
+            query_id=self.plan.query_id, placement=self.plan.placement,
+            streams=[p.stats for p in self.pullers],
+            pool=self.pool.stats if self.pool is not None else None)

@@ -12,6 +12,7 @@ from .serialize import pack, unpack, serialized_size  # noqa: F401
 from .fabric import Fabric, FabricConfig, WireStats  # noqa: F401
 from .transport import (  # noqa: F401
     RpcTransport, ThallusTransport, Transport, TransportStats, make_transport,
+    rdma_pull_batch,
 )
 from .protocol import (  # noqa: F401
     QueryEngine, RecordBatchReader, RpcClient, ScanHandle, ThallusClient,

@@ -57,6 +57,7 @@ class BulkHandle:
     descs: tuple[SegmentDesc, ...]
     mode: str  # "read_only" | "write_only" | "read_write"
     segments: tuple[np.ndarray, ...] | None = None
+    registered: bool = False  # segments live in a pre-registered (pinned) pool
 
     @property
     def total_bytes(self) -> int:
@@ -107,10 +108,15 @@ def size_vectors(batch: RecordBatch) -> tuple[list[int], list[int], list[int]]:
     return data, offs, nulls
 
 
-def allocate_like(descs: Sequence[SegmentDesc]) -> BulkHandle:
+def allocate_like(descs: Sequence[SegmentDesc], pin: bool = False) -> BulkHandle:
     """Client side: allocate a write-only local bulk with the same layout as
-    a remote handle ("allocate a similar layout of buffers as on the server")."""
-    segs = tuple(np.empty(d.nbytes // np.dtype(d.dtype).itemsize, dtype=d.dtype)
+    a remote handle ("allocate a similar layout of buffers as on the server").
+
+    ``pin=True`` faults the pages in at allocation time (zero-fill), the way
+    RDMA registration must before the NIC can target the buffer — the honest
+    per-batch cost a registered buffer pool amortizes away."""
+    alloc = np.zeros if pin else np.empty
+    segs = tuple(alloc(d.nbytes // np.dtype(d.dtype).itemsize, dtype=d.dtype)
                  for d in descs)
     return BulkHandle(str(_uuid.uuid4()), tuple(descs), "write_only", segments=segs)
 

@@ -54,6 +54,7 @@ class WireStats:
     num_segments: int = 0
     measured_copy_s: float = 0.0      # diagnostic only
     modeled_wire_s: float = 0.0
+    modeled_register_s: float = 0.0   # registration share of modeled_wire_s
 
     @property
     def total_s(self) -> float:
@@ -69,6 +70,7 @@ class Fabric:
         self.rdma_count = 0
         self.bytes_over_rpc = 0
         self.bytes_over_rdma = 0
+        self.registrations = 0         # segments pinned via register()
 
     # ------------------------------------------------------------------ RPC
     def rpc(self, payload_bytes: int = 0) -> WireStats:
@@ -79,13 +81,28 @@ class Fabric:
         return WireStats(bytes_moved=payload_bytes, num_segments=1,
                          modeled_wire_s=wire)
 
+    # ----------------------------------------------------------- registration
+    def register(self, num_segments: int) -> float:
+        """Pin ``num_segments`` memory regions up front (a buffer pool filling
+        its registration cache). Returns the modeled one-time cost so callers
+        can account for it; subsequent ``rdma_pull(..., registered=True)``
+        calls skip the per-segment term those pins amortize."""
+        self.registrations += num_segments
+        return num_segments * self.config.seg_register_s
+
     # ----------------------------------------------------------------- RDMA
     def rdma_pull(self, src: Sequence[np.ndarray],
-                  dst: Sequence[np.ndarray]) -> WireStats:
+                  dst: Sequence[np.ndarray],
+                  registered: bool = False) -> WireStats:
         """Scatter-gather RDMA READ: each remote segment lands in the matching
         local segment, one-to-one. The placement memcpy is executed for real
         (it stands in for the DMA engine write into client memory); the wire
-        time is modeled at RDMA bandwidth + per-segment registration."""
+        time is modeled at RDMA bandwidth + per-segment registration.
+
+        ``registered=True`` is the registration-cache fast path: the local
+        segments came from a pre-registered pool (and the remote table memory
+        is pinned server-side), so the per-segment registration term — the
+        constant that erodes the small-batch advantage — is not charged."""
         if len(src) != len(dst):
             raise ValueError("segment count mismatch")
         nbytes = 0
@@ -103,11 +120,13 @@ class Fabric:
         copy_s = time.perf_counter() - t0
         self.rdma_count += 1
         self.bytes_over_rdma += nbytes
+        register_s = 0.0 if registered else len(src) * self.config.seg_register_s
         wire = (self.config.rdma_setup_s
-                + len(src) * self.config.seg_register_s
+                + register_s
                 + nbytes / self.config.rdma_bw)
         return WireStats(bytes_moved=nbytes, num_segments=len(src),
-                         measured_copy_s=copy_s, modeled_wire_s=wire)
+                         measured_copy_s=copy_s, modeled_wire_s=wire,
+                         modeled_register_s=register_s)
 
     # ------------------------------------------------------------ RPC bulk
     def rpc_payload(self, wire_buffer: np.ndarray) -> WireStats:
@@ -122,3 +141,4 @@ class Fabric:
     def reset_counters(self) -> None:
         self.rpc_count = self.rdma_count = 0
         self.bytes_over_rpc = self.bytes_over_rdma = 0
+        self.registrations = 0

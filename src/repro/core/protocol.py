@@ -22,7 +22,8 @@ Fault-tolerance extensions beyond the paper (needed at cluster scale):
   a lease that is never finalized is reclaimable;
 * multiple servers can serve the same dataset; the client-side
   :class:`repro.data.loader.ThallusLoader` issues backup requests to the
-  first-ready replica (straggler mitigation).
+  first-ready replica (straggler mitigation), and :mod:`repro.cluster`
+  builds partitioned multi-stream scans out of these resumable leases.
 """
 from __future__ import annotations
 
@@ -61,7 +62,11 @@ class _ReaderEntry:
     schema: Schema
     batches_sent: int = 0
     created_at: float = dataclasses.field(default_factory=time.monotonic)
+    last_activity: float = dataclasses.field(default_factory=time.monotonic)
     finalized: bool = False
+
+    def touch(self) -> None:
+        self.last_activity = time.monotonic()
 
 
 @dataclasses.dataclass
@@ -102,6 +107,7 @@ class ThallusServer:
         """Walk the reader; for each batch expose a read-only bulk and invoke
         the client's do_rdma. Returns number of batches shipped."""
         entry = self._entry(uid)
+        entry.touch()
         shipped = 0
         while max_batches is None or shipped < max_batches:
             batch = entry.reader.read_next()
@@ -112,8 +118,22 @@ class ThallusServer:
             self.fabric.rpc(64 + 8 * sum(len(v) for v in sizes))  # control msg
             do_rdma(batch.num_rows, sizes, handle)
             entry.batches_sent += 1
+            entry.touch()
             shipped += 1
         return shipped
+
+    # ----------------------------------------------------------- next_batch
+    def next_batch(self, uid: str) -> RecordBatch | None:
+        """Public single-batch cursor advance (the ``iterate`` equivalent for
+        clients that ship data some other way, e.g. the RPC baseline). Keeps
+        the reader-map bookkeeping — cursor position, lease activity — in one
+        place instead of clients reaching into server internals."""
+        entry = self._entry(uid)
+        entry.touch()
+        batch = entry.reader.read_next()
+        if batch is not None:
+            entry.batches_sent += 1
+        return batch
 
     # ------------------------------------------------------------- finalize
     def finalize(self, uid: str) -> None:
@@ -133,10 +153,14 @@ class ThallusServer:
         return self._entry(uid).batches_sent
 
     def reclaim_stale(self, older_than_s: float) -> int:
-        """Evict leases whose client died without finalize (fault tolerance)."""
+        """Evict leases whose client died without finalize (fault tolerance).
+
+        Staleness is judged by ``last_activity`` — refreshed on every
+        ``iterate``/``next_batch`` — not ``created_at``, so a long-running
+        but actively-pulling scan is never evicted out from under its client."""
         now = time.monotonic()
         stale = [u for u, e in self.reader_map.items()
-                 if now - e.created_at > older_than_s]
+                 if now - e.last_activity > older_than_s]
         for u in stale:
             del self.reader_map[u]
         return len(stale)
@@ -158,14 +182,10 @@ class ThallusClient:
     def do_rdma(self, num_rows: int,
                 sizes: tuple[list[int], list[int], list[int]],
                 remote: bulk_mod.BulkHandle) -> TransportStats:
-        stats = TransportStats()
-        t0 = time.perf_counter()
-        local = bulk_mod.allocate_like(remote.descs)     # same layout as server
-        stats.alloc_s = time.perf_counter() - t0
-        stats.wire = self.fabric.rdma_pull(remote.segments, local.segments)
-        t0 = time.perf_counter()
-        batch = bulk_mod.assemble_batch(self._schema, num_rows, local.segments)
-        stats.deserialize_s = time.perf_counter() - t0
+        from .transport import rdma_pull_batch  # shared client data plane
+
+        batch, _, stats = rdma_pull_batch(self.fabric, self._schema,
+                                          num_rows, remote)
         self.batches.append(batch)
         self.stats.append(stats)
         if self.sink is not None:
@@ -173,12 +193,16 @@ class ThallusClient:
         return stats
 
     # ------------------------------------------------------------ full run
-    def run_query(self, sql: str, dataset: str,
-                  start_batch: int = 0) -> list[RecordBatch]:
-        """init_scan → iterate(→do_rdma per batch) → finalize."""
+    def run_query(self, sql: str, dataset: str, start_batch: int = 0,
+                  max_batches: int | None = None) -> list[RecordBatch]:
+        """init_scan → iterate(→do_rdma per batch) → finalize.
+
+        ``start_batch``/``max_batches`` bound the scan to a batch range —
+        a backup request for one batch pulls exactly one batch."""
         handle = self.server.init_scan(sql, dataset, start_batch=start_batch)
         self._schema = handle.schema
-        self.server.iterate(handle.uuid, self.do_rdma)
+        self.server.iterate(handle.uuid, self.do_rdma,
+                            max_batches=max_batches)
         self.server.finalize(handle.uuid)
         return self.batches
 
@@ -198,15 +222,15 @@ class RpcClient:
         self.batches: list[RecordBatch] = []
         self.stats: list[TransportStats] = []
 
-    def run_query(self, sql: str, dataset: str) -> list[RecordBatch]:
+    def run_query(self, sql: str, dataset: str, start_batch: int = 0,
+                  max_batches: int | None = None) -> list[RecordBatch]:
         from . import serialize  # local import to keep module edges clean
 
-        handle = self.server.init_scan(sql, dataset)
-        entry = self.server._entry(handle.uuid)
-        while True:
-            batch = entry.reader.read_next()
-            if batch is None:
-                break
+        handle = self.server.init_scan(sql, dataset, start_batch=start_batch)
+        pulled = 0
+        while (max_batches is None or pulled < max_batches) and \
+                (batch := self.server.next_batch(handle.uuid)) is not None:
+            pulled += 1
             stats = TransportStats(control_rpcs=1)
             t0 = time.perf_counter()
             wire_buf = serialize.pack(batch)               # staging copy
@@ -215,7 +239,6 @@ class RpcClient:
             t0 = time.perf_counter()
             out = serialize.unpack(wire_buf, zero_copy=True)
             stats.deserialize_s = time.perf_counter() - t0
-            entry.batches_sent += 1
             self.batches.append(out)
             self.stats.append(stats)
             if self.sink is not None:

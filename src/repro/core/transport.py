@@ -42,6 +42,39 @@ class TransportStats:
         return self.serialize_s / self.total_s if self.total_s else 0.0
 
 
+def rdma_pull_batch(fabric: Fabric, schema, num_rows: int,
+                    remote: bulk_mod.BulkHandle, pool=None, pin: bool = False
+                    ) -> tuple[RecordBatch, bulk_mod.BulkHandle, "TransportStats"]:
+    """The client-side data plane every puller shares: allocate a matching
+    local bulk (``pool.acquire`` checkout when a buffer pool is given, else a
+    fresh allocation — ``pin=True`` faults the pages like registration must),
+    RDMA-pull one-to-one, assemble the batch zero-copy. One implementation so
+    the single-stream and cluster decompositions can never drift apart.
+
+    Returns ``(batch, local_handle, stats)``; pooled callers release
+    ``local_handle`` once the batch is consumed."""
+    stats = TransportStats()
+    t0 = time.perf_counter()
+    if pool is not None:
+        local = pool.acquire(remote.descs)
+    else:
+        local = bulk_mod.allocate_like(remote.descs, pin=pin)
+    stats.alloc_s = time.perf_counter() - t0
+    try:
+        stats.wire = fabric.rdma_pull(remote.segments, local.segments,
+                                      registered=local.registered)
+        t0 = time.perf_counter()
+        batch = bulk_mod.assemble_batch(schema, num_rows, local.segments)
+        stats.deserialize_s = time.perf_counter() - t0
+    except BaseException:
+        # a failed pull must hand its checkout back, or fault-resume loops
+        # leak one slab set per fault
+        if pool is not None:
+            pool.release(local)
+        raise
+    return batch, local, stats
+
+
 class Transport:
     name = "abstract"
 

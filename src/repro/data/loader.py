@@ -2,20 +2,25 @@
 
 Server side: token shards behind the query engine. Client side: each
 training job ``init_scan``s its shard query, streams record batches via the
-zero-copy transport, reshapes token columns *by view*, and lands per-column
-device arrays on the mesh (`batch_to_device` — the scatter-gather path).
+zero-copy transport, reshapes token columns *by view* (``batch_to_device``
+being the trainer's job), and feeds (tokens, labels) numpy batches.
 
-Cluster-scale behaviours implemented here:
+Three transports, one knob:
 
-* **replicated servers + backup requests** (straggler mitigation): every
-  batch is requested from the primary; if the primary's simulated response
-  time exceeds ``straggler_deadline_s`` (or it raises), the loader pulls the
-  batch from the next replica — first-ready wins, MapReduce-style.
-* **resumable cursors**: `state_dict()`/`load_state_dict()` round-trip the
-  batch offset through the checkpoint manifest; restart fast-forwards via
-  ``init_scan(start_batch=...)``.
-* **transport choice**: "thallus" (zero-copy) or "rpc" (serialize) — the
-  benchmark axis of the paper, selectable end to end.
+* ``"thallus"`` / ``"rpc"`` — the paper's single-stream scan (zero-copy vs
+  serialize), with **backup requests**: if the primary's simulated response
+  time exceeds ``straggler_deadline_s``, the batch is re-pulled from the
+  next replica, first-ready wins.
+* ``"cluster"`` — the :mod:`repro.cluster` dataplane: the query is planned
+  into per-replica batch-range partitions (``placement="replica"``, or
+  ``"shard"`` if the servers hold disjoint shards), pulled over N concurrent
+  leases through a registered buffer pool. This subsumes the backup-request
+  hack — a slow or failed stream is resumed individually via
+  ``init_scan(start_batch=…)`` instead of re-running the whole query.
+
+Resumable cursors in every mode: ``state_dict()``/``load_state_dict()``
+round-trip the cursor through the checkpoint manifest. Cluster mode tracks
+*per-stream* offsets (the merged order is only defined per stream).
 """
 from __future__ import annotations
 
@@ -24,6 +29,7 @@ from typing import Iterator
 
 import numpy as np
 
+from ..cluster import BufferPool, ClusterCoordinator, MultiStreamPuller
 from ..core.protocol import RpcClient, ThallusClient, ThallusServer
 from ..core.recordbatch import RecordBatch
 from .tokens import batch_to_tokens, shift_labels
@@ -33,6 +39,7 @@ from .tokens import batch_to_tokens, shift_labels
 class LoaderStats:
     batches: int = 0
     backup_requests: int = 0
+    stream_resumes: int = 0
     transport_s: float = 0.0
 
 
@@ -42,9 +49,13 @@ class ThallusLoader:
 
     def __init__(self, servers: list[ThallusServer], sql: str, dataset: str,
                  seq_len: int, batch_seqs: int, transport: str = "thallus",
-                 straggler_deadline_s: float = 0.5, start_batch: int = 0):
+                 straggler_deadline_s: float = 0.5, start_batch: int = 0,
+                 num_streams: int | None = None, use_pool: bool = True,
+                 placement: str = "replica"):
         if not servers:
             raise ValueError("need at least one server")
+        if transport not in ("thallus", "rpc", "cluster"):
+            raise ValueError(f"unknown transport {transport!r}")
         self.servers = servers
         self.sql = sql
         self.dataset = dataset
@@ -52,37 +63,48 @@ class ThallusLoader:
         self.batch_seqs = batch_seqs
         self.transport = transport
         self.deadline = straggler_deadline_s
+        self.num_streams = num_streams
+        self.use_pool = use_pool
+        self.placement = placement
         self.stats = LoaderStats()
         self._offset = start_batch
+        self._stream_offsets: list[int] = []
         self._buffer: list[np.ndarray] = []    # leftover sequences
 
     # -- checkpointing ------------------------------------------------------
-    def state_dict(self) -> dict[str, int]:
-        return {"batch_offset": self._offset}
+    def state_dict(self) -> dict:
+        return {"batch_offset": self._offset,
+                "stream_offsets": list(self._stream_offsets)}
 
-    def load_state_dict(self, d: dict[str, int]) -> None:
+    def load_state_dict(self, d: dict) -> None:
         self._offset = int(d["batch_offset"])
+        self._stream_offsets = [int(v) for v in d.get("stream_offsets", [])]
         self._buffer.clear()
 
     # -- streaming ----------------------------------------------------------
     def _pull_batches(self) -> Iterator[RecordBatch]:
+        if self.transport == "cluster":
+            yield from self._pull_cluster()
+        else:
+            yield from self._pull_single_stream()
+
+    def _pull_single_stream(self) -> Iterator[RecordBatch]:
         """Stream record batches from the first-ready replica per batch."""
-        clients = []
-        for server in self.servers:
-            cls = ThallusClient if self.transport == "thallus" else RpcClient
-            clients.append(cls(server))
-        primary = clients[0]
+        cls = ThallusClient if self.transport == "thallus" else RpcClient
+        primary = cls(self.servers[0])
         batches = primary.run_query(self.sql, self.dataset,
-                                    **({"start_batch": self._offset}
-                                       if self.transport == "thallus" else {}))
+                                    start_batch=self._offset)
         for i, b in enumerate(batches):
             stats = primary.stats[i]
-            if stats.total_s > self.deadline and len(clients) > 1:
-                # straggler: issue backup request to replica for this batch
-                backup = clients[1]
+            if stats.total_s > self.deadline and len(self.servers) > 1:
+                # straggler: issue backup request to a replica for exactly
+                # this batch. self._offset is its global index (advanced
+                # once per earlier batch); the client is fresh and the pull
+                # bounded, so rb == [that one batch].
+                backup = cls(self.servers[1])
                 rb = backup.run_query(self.sql, self.dataset,
-                                      **({"start_batch": self._offset + i}
-                                         if self.transport == "thallus" else {}))
+                                      start_batch=self._offset,
+                                      max_batches=1)
                 self.stats.backup_requests += 1
                 b = rb[0] if rb else b
             self.stats.transport_s += stats.total_s
@@ -90,9 +112,67 @@ class ThallusLoader:
             self._offset += 1
             yield b
 
+    def _pull_cluster(self) -> Iterator[RecordBatch]:
+        """Partitioned multi-stream pull with per-stream resume offsets.
+
+        Resume semantics: when the checkpoint carries ``stream_offsets``
+        (written by a cluster-mode run), each stream fast-forwards
+        server-side via ``init_scan(start_batch=…)`` — no wasted transport.
+        A bare global offset (the ``start_batch`` constructor arg, or a
+        checkpoint from a single-stream run) cannot be mapped onto streams
+        exactly, so the first ``offset`` batches are pulled and discarded —
+        correct under any schedule, at the cost of re-transporting them.
+
+        With the pool on, a yielded batch's buffers are recycled once the
+        next batch is requested, so ``__iter__`` copies the token block out
+        (the np.stack that builds training chunks copies regardless)."""
+        coordinator = ClusterCoordinator()
+        for i, server in enumerate(self.servers):
+            coordinator.add_server(f"s{i}", server)
+        plan = coordinator.plan(self.sql, self.dataset,
+                                num_streams=self.num_streams,
+                                placement=self.placement)
+        # fast-forward each stream past what previous runs already delivered
+        if self._stream_offsets and \
+                len(self._stream_offsets) != len(plan.endpoints):
+            raise ValueError(
+                f"checkpoint has {len(self._stream_offsets)} stream offsets "
+                f"but the plan has {len(plan.endpoints)} endpoints")
+        offsets = self._stream_offsets or [0] * len(plan.endpoints)
+        endpoints = tuple(
+            dataclasses.replace(
+                ep, start_batch=ep.start_batch + off,
+                max_batches=(None if ep.max_batches is None
+                             else ep.max_batches - off))
+            for ep, off in zip(plan.endpoints, offsets))
+        plan = dataclasses.replace(plan, endpoints=endpoints)
+        pool = BufferPool(self.servers[0].fabric) if self.use_pool else None
+        puller = MultiStreamPuller(coordinator, plan, pool=pool,
+                                   schedule="round_robin")
+        self._stream_offsets = offsets
+        skip = self._offset - sum(offsets)   # global offset not yet mapped
+        if skip < 0:
+            raise ValueError(
+                f"inconsistent checkpoint: batch_offset={self._offset} < "
+                f"sum(stream_offsets)={sum(offsets)}")
+        for idx, batch in puller.batches():
+            self._stream_offsets[idx] += 1
+            if skip > 0:        # already consumed before this incarnation
+                skip -= 1
+                continue
+            self._offset += 1
+            self.stats.batches += 1
+            yield batch
+        cluster = puller.stats()
+        self.stats.stream_resumes += cluster.resumes
+        self.stats.transport_s += cluster.critical_path_s
+
     def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        copy_out = self.transport == "cluster" and self.use_pool
         for rb in self._pull_batches():
             seqs = batch_to_tokens(rb, self.seq_len)
+            if copy_out:
+                seqs = seqs.copy()     # pooled buffers are about to recycle
             self._buffer.extend(seqs)
             while len(self._buffer) >= self.batch_seqs:
                 chunk = np.stack(self._buffer[: self.batch_seqs])

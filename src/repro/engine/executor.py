@@ -61,6 +61,19 @@ class Engine:
             return self._execute_aggregate(query, table)
         return self._execute_scan(query, table)
 
+    def estimate_batches(self, sql: str, dataset: str) -> int | None:
+        """Planner statistics: the exact result-batch count when it is known
+        without evaluation (projection-only scans, aggregates), else None —
+        the caller must fall back to draining a planning reader. Filters and
+        limits can drop batches, so those shapes are not estimable."""
+        query = parse(sql)
+        table = self.catalog.get(dataset)
+        if query.is_aggregate:
+            return 1
+        if query.where is None and query.limit is None:
+            return len(table.batches)
+        return None
+
     # -- plain scans: project + filter + limit, streamed ---------------------
     def _execute_scan(self, query: Query, table: Table) -> QueryReader:
         names = (list(table.schema.names) if query.select is None

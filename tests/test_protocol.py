@@ -79,3 +79,60 @@ def test_transport_stats_decompose(server):
         assert st.serialize_s == 0.0
         assert st.wire.bytes_moved > 0
         assert st.total_s > 0
+
+
+def test_finalize_twice_raises(server):
+    handle = server.init_scan("SELECT c0 FROM t", "/d/t")
+    server.finalize(handle.uuid)
+    with pytest.raises(KeyError):
+        server.finalize(handle.uuid)
+
+
+def test_iterate_after_finalize_raises(server):
+    client = ThallusClient(server)
+    handle = server.init_scan("SELECT c0 FROM t", "/d/t")
+    client._schema = handle.schema
+    server.finalize(handle.uuid)
+    with pytest.raises(KeyError):
+        server.iterate(handle.uuid, client.do_rdma)
+
+
+def test_resume_past_end_of_stream(server):
+    """init_scan(start_batch=k) beyond the last batch yields an immediately
+    drained (but valid, finalizable) reader."""
+    client = ThallusClient(server)
+    batches = client.run_query("SELECT c0 FROM t", "/d/t", start_batch=999)
+    assert batches == []
+    assert not server.reader_map     # run_query finalized the empty lease
+
+
+def test_rpc_client_resumes_from_cursor(server):
+    """The baseline client takes start_batch through the same public API —
+    no reaching into server internals (the thallus/rpc asymmetry is gone)."""
+    full = RpcClient(server).run_query("SELECT c0 FROM t", "/d/t")
+    tail = RpcClient(server).run_query("SELECT c0 FROM t", "/d/t",
+                                       start_batch=3)
+    assert sum(b.num_rows for b in tail) == \
+           sum(b.num_rows for b in full[3:])
+    np.testing.assert_array_equal(tail[0].column("c0").values,
+                                  full[3].column("c0").values)
+
+
+def test_reclaim_spares_active_scans(server):
+    """Regression: a long-running scan that keeps iterating must NOT be
+    evicted just because it was created long ago — staleness is judged by
+    last_activity, refreshed on every iterate/next_batch."""
+    import time as _time
+
+    client = ThallusClient(server)
+    active = server.init_scan("SELECT c0 FROM t", "/d/t")
+    client._schema = active.schema
+    abandoned = server.init_scan("SELECT c1 FROM t", "/d/t")
+    _time.sleep(0.05)
+    # the active lease pulls a batch (refreshing last_activity); the
+    # abandoned one has been idle the whole time
+    server.iterate(active.uuid, client.do_rdma, max_batches=1)
+    assert server.reclaim_stale(older_than_s=0.04) == 1
+    assert active.uuid in server.reader_map
+    assert abandoned.uuid not in server.reader_map
+    server.finalize(active.uuid)

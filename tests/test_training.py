@@ -168,6 +168,12 @@ def test_loader_straggler_backup():
     out = list(loader)
     assert loader.stats.backup_requests > 0
     assert len(out) == 4
+    # regression: backups must substitute the SAME batch (replicas share the
+    # seed, so a wrong start_batch index would surface as different tokens)
+    ref = list(ThallusLoader([slow], "SELECT tokens FROM tok", "/d",
+                             seq_len=16, batch_seqs=8))
+    for got, want in zip(out, ref):
+        np.testing.assert_array_equal(got["tokens"], want["tokens"])
 
 
 def test_elastic_restore_across_meshes(tmp_path):

@@ -1,4 +1,4 @@
-"""Paper Fig. 2 + the cluster dataplane axis.
+"""Paper Fig. 2 + the cluster dataplane axis + the qos contention axis.
 
 Fig. 2: data transport duration, Thallus vs Thallium RPC, across
 column-selectivity (result-set size). Expect up to ~5.5× and a gain that
@@ -11,9 +11,18 @@ off vs on. Every cluster row is decomposed from the same
 (slowest stream), and ``derived`` carries the measured ``alloc_us`` and the
 modeled registration cost the pool amortizes.
 
+Contention axis (clients × quota): N clients in two classes (interactive vs
+batch) submit through the ``repro.qos`` gateway against the same 4-shard
+cluster, with QoS on (weighted-fair queue + admission quotas + token-bucket
+lease metering) vs off (FIFO, unlimited). ``us_per_call`` is the class's
+modeled p50 grant latency; ``derived`` carries the full ``QosStats``
+summary (queue depth, shed count, per-class throughput). The acceptance
+check: with quotas enabled, the interactive class's p50 grant latency drops
+under the same heavy-client load.
+
 Runnable standalone::
 
-    PYTHONPATH=src python benchmarks/transport_bench.py --transport thallus
+    PYTHONPATH=src python benchmarks/transport_bench.py --scenario contention
 """
 from __future__ import annotations
 
@@ -30,10 +39,15 @@ else:
 from repro.cluster import BufferPool, ClusterCoordinator, cluster_scan
 from repro.core import Fabric, RpcClient, ThallusClient, ThallusServer
 from repro.engine import Engine, make_numeric_table
+from repro.qos import (AdmissionConfig, AdmissionController, ClientClass,
+                       ScanGateway, ScanRequest)
 
 TOTAL_COLS = 8
 CLUSTER_ROWS = 1 << 20
 CLUSTER_BATCH_ROWS = 1 << 15
+CONTENTION_ROWS = 1 << 18
+CONTENTION_BATCH_ROWS = 1 << 14
+CONTENTION_SHARDS = 4
 
 
 def _server(nrows: int) -> ThallusServer:
@@ -103,17 +117,84 @@ def run_cluster() -> list[Row]:
     return rows
 
 
+def run_contention() -> list[Row]:
+    """Clients × quota axis: heavy batch scans vs interactive lookups
+    through the qos gateway, QoS off (FIFO, unlimited) vs on (WFQ + quota +
+    token bucket). Deterministic: all latencies are modeled."""
+    base_cfg = calibrated_fabric().config
+    table = make_numeric_table("t", CONTENTION_ROWS, TOTAL_COLS,
+                               batch_rows=CONTENTION_BATCH_ROWS)
+    heavy_sql = ("SELECT " + ", ".join(f"c{i}" for i in range(TOTAL_COLS))
+                 + " FROM t")
+    light_sql = "SELECT c0 FROM t"
+    rows: list[Row] = []
+    for quotas in (False, True):
+        coordinator = ClusterCoordinator()
+        for i in range(CONTENTION_SHARDS):
+            coordinator.add_server(f"s{i}", ThallusServer(Engine(),
+                                                          Fabric(base_cfg)))
+        coordinator.place_shards("/d", table)
+        admission = AdmissionController(AdmissionConfig(
+            max_streams_per_client=2, lease_rate_per_s=1e3,
+            lease_burst=4)) if quotas else None
+        gateway = ScanGateway(
+            coordinator,
+            classes=[ClientClass("interactive", 4.0), ClientClass("batch", 1.0)],
+            admission=admission, fair=quotas)
+        # the contention shape: a heavy client floods first, interactive
+        # lookups arrive behind it, and a late burst has a deadline so tight
+        # it must be shed under any ordering (the shed counter's fixture)
+        for _ in range(4):
+            gateway.submit(ScanRequest("heavy", "batch", heavy_sql, "/d",
+                                       cost_hint=8.0))
+        for _ in range(6):
+            gateway.submit(ScanRequest("ui", "interactive", light_sql, "/d",
+                                       cost_hint=1.0, deadline_s=50e-3))
+        for _ in range(2):
+            gateway.submit(ScanRequest("burst", "batch", heavy_sql, "/d",
+                                       cost_hint=8.0, deadline_s=1e-6))
+        gateway.run()
+        qos = gateway.stats
+        for klass in sorted(qos.classes):
+            c = qos.classes[klass]
+            rows.append(Row(
+                f"contention_quotas{int(quotas)}_{klass}",
+                c.p50_grant_latency_s * 1e6,
+                f"clients=3 quotas={'on' if quotas else 'off'} "
+                f"granted={c.granted}/{c.submitted} shed={c.shed} "
+                f"tput_MBps={c.throughput_bytes_per_s / 1e6:.1f} | "
+                + qos.summary()))
+    return rows
+
+
+_SCENARIOS = {"fig2": lambda transport: run(transport),
+              "cluster": lambda transport: run_cluster(),
+              "contention": lambda transport: run_contention()}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--transport", choices=("rpc", "thallus", "both"),
                     default="both")
+    ap.add_argument("--scenario", choices=(*_SCENARIOS, "all"),
+                    default=None,
+                    help="which axis to run (default: fig2, which itself "
+                    "appends the cluster axis; 'all' adds contention)")
     ap.add_argument("--cluster-only", action="store_true",
-                    help="skip the Fig-2 sweep, print only the cluster axis")
+                    help="alias for --scenario cluster (back-compat)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    rows = run_cluster() if args.cluster_only else run(args.transport)
-    for row in rows:
-        print(row.csv(), flush=True)
+    if args.cluster_only:
+        scenarios = ["cluster"]
+    elif args.scenario == "all":
+        scenarios = ["fig2", "contention"]   # fig2 already appends cluster
+    elif args.scenario is not None:
+        scenarios = [args.scenario]
+    else:
+        scenarios = ["fig2"]
+    for name in scenarios:
+        for row in _SCENARIOS[name](args.transport):
+            print(row.csv(), flush=True)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ def cluster_scan(coordinator: ClusterCoordinator, sql: str, dataset: str,
                  num_streams: int | None = None,
                  pool: BufferPool | None = None,
                  lease_batches: int = 1, schedule: str = "round_robin",
+                 prefetch: bool = True, client_id: str = "default",
                  sink: Callable[[int, RecordBatch], None] | None = None,
                  ) -> ClusterStats:
     """One-call partitioned scan: plan → pull all streams → stats.
@@ -33,5 +34,6 @@ def cluster_scan(coordinator: ClusterCoordinator, sql: str, dataset: str,
     """
     scan_plan = coordinator.plan(sql, dataset, num_streams=num_streams)
     puller = MultiStreamPuller(coordinator, scan_plan, pool=pool,
-                               lease_batches=lease_batches, schedule=schedule)
+                               lease_batches=lease_batches, schedule=schedule,
+                               prefetch=prefetch, client_id=client_id)
     return puller.run(sink)

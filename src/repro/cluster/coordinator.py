@@ -13,7 +13,13 @@ The coordinator is the control-plane brain the dataplane modules lean on:
 * **lease lifecycle** — :meth:`open_stream` / :meth:`resume_stream` /
   :meth:`close_stream` wrap ``init_scan``/``finalize``, and
   :meth:`reclaim_stale` sweeps every server's reader map (activity-based, so
-  live streams survive the sweep).
+  live streams survive the sweep);
+* **admission** — an optional :class:`repro.qos.AdmissionController` (duck
+  typed, so there is no cluster→qos import) gates every lease grant:
+  ``open_stream`` acquires a per-client stream slot (raising
+  ``qos.Backpressure`` at the quota or over the memory budget) and
+  ``close_stream`` releases it. The qos ``ScanGateway`` meters at request
+  granularity instead, so a gateway's coordinator runs without one.
 """
 from __future__ import annotations
 
@@ -33,8 +39,9 @@ class _Placement:
 class ClusterCoordinator:
     """Registry + lease lifecycle for a set of Thallus servers."""
 
-    def __init__(self) -> None:
+    def __init__(self, admission=None) -> None:
         self.servers: dict[str, ThallusServer] = {}
+        self.admission = admission
         self._placements: dict[str, _Placement] = {}
 
     # ------------------------------------------------------------ registry
@@ -101,20 +108,35 @@ class ClusterCoordinator:
                          num_streams=num_streams)
 
     # ------------------------------------------------- stream lease lifecycle
-    def open_stream(self, endpoint: Endpoint) -> ScanHandle:
-        server = self.server(endpoint.server_id)
-        return server.init_scan(endpoint.sql, endpoint.dataset,
-                                start_batch=endpoint.start_batch)
+    def open_stream(self, endpoint: Endpoint,
+                    client_id: str = "default") -> ScanHandle:
+        """Open one stream lease; admission-gated when a controller is set
+        (may raise ``qos.Backpressure`` with a retry-after hint)."""
+        if self.admission is not None:
+            self.admission.acquire_stream(client_id)
+        try:
+            server = self.server(endpoint.server_id)
+            return server.init_scan(endpoint.sql, endpoint.dataset,
+                                    start_batch=endpoint.start_batch)
+        except BaseException:
+            if self.admission is not None:
+                self.admission.release_stream(client_id)
+            raise
 
     def resume_stream(self, endpoint: Endpoint, delivered: int) -> ScanHandle:
         """Restart one failed stream where it died: a fresh ``init_scan``
-        fast-forwarded past the batches the stream already delivered."""
+        fast-forwarded past the batches the stream already delivered. The
+        stream's admission slot stays held — a resume is the same logical
+        stream, not a new grant."""
         server = self.server(endpoint.server_id)
         return server.init_scan(
             endpoint.sql, endpoint.dataset,
             start_batch=endpoint.start_batch + delivered)
 
-    def close_stream(self, endpoint: Endpoint, uid: str) -> None:
+    def close_stream(self, endpoint: Endpoint, uid: str,
+                     client_id: str = "default") -> None:
+        if self.admission is not None:
+            self.admission.release_stream(client_id)
         server = self.server(endpoint.server_id)
         if uid in server.reader_map:   # may already be reclaimed/evicted
             server.finalize(uid)

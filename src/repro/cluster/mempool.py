@@ -17,7 +17,14 @@ register buffers *once*, then recycle them. This module does exactly that:
 * each slab's registration is charged to the fabric **once** (via
   :meth:`Fabric.register`); pulls into pooled buffers then take the
   ``registered=True`` fast path of :meth:`Fabric.rdma_pull` and skip the
-  per-segment term entirely.
+  per-segment term entirely;
+* resident slab bytes are bounded by an optional global **memory budget**
+  (``max_bytes``): when creating a slab pushes the pool over budget, the
+  least-recently-released free slabs are evicted — dropped *and
+  unregistered* (:meth:`Fabric.unregister`), since a pinned-but-idle slab is
+  exactly the registered memory an admission controller must reclaim. Slabs
+  checked out to in-flight pulls are never evicted, so the budget is a
+  high-water mark the pool converges back under as handles are released.
 """
 from __future__ import annotations
 
@@ -47,7 +54,10 @@ class PoolStats:
     misses: int = 0                 # checkouts that had to create a slab
     slabs_created: int = 0
     bytes_pooled: int = 0           # total slab bytes ever created
-    registered_segments: int = 0    # slabs pinned with the fabric
+    bytes_resident: int = 0         # live slab bytes (free + checked out)
+    evictions: int = 0              # slabs dropped + unregistered
+    bytes_evicted: int = 0
+    registered_segments: int = 0    # slabs currently pinned with the fabric
     modeled_register_s: float = 0.0  # one-time pinning cost (amortized)
     acquire_s: float = 0.0          # measured wall time inside acquire()
 
@@ -55,6 +65,26 @@ class PoolStats:
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    def delta_since(self, baseline: "PoolStats") -> "PoolStats":
+        """This pool's activity since ``baseline`` (a ``replace()`` copy
+        taken earlier). Counters are subtracted; the two *levels* —
+        ``bytes_resident`` and ``registered_segments`` — stay current.
+        A scan over a shared pool attributes exactly its own slab creation
+        (and registration cost) this way, instead of re-reporting the
+        pool's whole cumulative history per scan."""
+        return PoolStats(
+            hits=self.hits - baseline.hits,
+            misses=self.misses - baseline.misses,
+            slabs_created=self.slabs_created - baseline.slabs_created,
+            bytes_pooled=self.bytes_pooled - baseline.bytes_pooled,
+            bytes_resident=self.bytes_resident,
+            evictions=self.evictions - baseline.evictions,
+            bytes_evicted=self.bytes_evicted - baseline.bytes_evicted,
+            registered_segments=self.registered_segments,
+            modeled_register_s=(self.modeled_register_s
+                                - baseline.modeled_register_s),
+            acquire_s=self.acquire_s - baseline.acquire_s)
 
 
 class BufferPool:
@@ -65,26 +95,34 @@ class BufferPool:
     """
 
     def __init__(self, fabric: Fabric | None = None,
-                 max_free_per_class: int = 64):
+                 max_free_per_class: int = 64,
+                 max_bytes: int | None = None):
         self.fabric = fabric
         self.max_free_per_class = max_free_per_class
+        self.max_bytes = max_bytes
         self.stats = PoolStats()
         self._free: dict[int, list[np.ndarray]] = {}
         self._checked_out: dict[str, list[np.ndarray]] = {}
+        self._lru_seq = 0
+        self._release_seq: dict[int, int] = {}   # id(slab) -> release order
 
     # ----------------------------------------------------------- checkout
     def _slab(self, cls: int) -> np.ndarray:
         free = self._free.get(cls)
         if free:
             self.stats.hits += 1
-            return free.pop()
+            slab = free.pop()
+            self._release_seq.pop(id(slab), None)
+            return slab
         self.stats.misses += 1
         self.stats.slabs_created += 1
         self.stats.bytes_pooled += cls
+        self.stats.bytes_resident += cls
         slab = np.zeros(cls, dtype=np.uint8)   # zeros == fault pages in (pin)
         if self.fabric is not None:
             self.stats.modeled_register_s += self.fabric.register(1)
         self.stats.registered_segments += 1
+        self._evict_over_budget()
         return slab
 
     def acquire(self, descs: Sequence[SegmentDesc]) -> BulkHandle:
@@ -110,7 +148,42 @@ class BufferPool:
         for slab in slabs:
             free = self._free.setdefault(slab.nbytes, [])
             if len(free) < self.max_free_per_class:
+                self._lru_seq += 1
+                self._release_seq[id(slab)] = self._lru_seq
                 free.append(slab)
+            else:
+                self._drop(slab)     # class list full: evict outright
+        self._evict_over_budget()
+
+    # ------------------------------------------------------------ eviction
+    def _drop(self, slab: np.ndarray) -> None:
+        """Unpin one slab and forget it (memory goes back to the OS)."""
+        self._release_seq.pop(id(slab), None)
+        self.stats.evictions += 1
+        self.stats.bytes_evicted += slab.nbytes
+        self.stats.bytes_resident -= slab.nbytes
+        self.stats.registered_segments -= 1
+        if self.fabric is not None:
+            self.fabric.unregister(1)
+
+    def _evict_over_budget(self) -> None:
+        """LRU eviction: while resident bytes exceed the budget, drop the
+        least-recently-released free slab (any size class). Checked-out
+        slabs are untouchable, so an over-budget pool with everything in
+        flight converges back under budget as handles are released."""
+        if self.max_bytes is None:
+            return
+        while self.stats.bytes_resident > self.max_bytes:
+            victim: tuple[int, int, int] | None = None   # (seq, cls, index)
+            for cls, lst in self._free.items():
+                for i, slab in enumerate(lst):
+                    seq = self._release_seq.get(id(slab), 0)
+                    if victim is None or seq < victim[0]:
+                        victim = (seq, cls, i)
+            if victim is None:
+                return     # nothing free to evict right now
+            _, cls, i = victim
+            self._drop(self._free[cls].pop(i))
 
     # ---------------------------------------------------------- inspection
     @property

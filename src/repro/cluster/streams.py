@@ -21,6 +21,19 @@ time), and :attr:`ClusterStats.critical_path_s` — the cluster's transport
 duration — is the slowest stream's clock, while ``sum_total_s`` is the total
 work. Both come from the same per-batch stats, so benchmark decompositions
 for 1 stream and N streams share one code path.
+
+Two flow-control behaviours ride on that clock:
+
+* **async pipelining** (``prefetch=True``, the default): each stream keeps a
+  one-deep prefetch slot, so the control/lease RPC for batch *k+1* is posted
+  while the modeled RDMA pull of batch *k* is in flight. The hidden portion
+  is recorded as ``prefetch_overlap_s`` and the stream clock only pays the
+  remainder — turning prefetch off shows the full serial RPC cost in
+  ``critical_path_s``.
+* **backpressure reporting**: when the coordinator carries a
+  ``qos.AdmissionController``, every lease grant asks its token bucket for a
+  token; a throttled grant's modeled wait is charged to the stream clock and
+  surfaced as ``throttle_wait_s`` — the signal the qos layer aggregates.
 """
 from __future__ import annotations
 
@@ -51,6 +64,9 @@ class StreamStats:
     deserialize_s: float = 0.0      # measured: zero-copy assembly
     modeled_wire_s: float = 0.0
     modeled_register_s: float = 0.0  # per-pull registration actually charged
+    control_rpc_s: float = 0.0      # modeled lease/control RPC time charged
+    prefetch_overlap_s: float = 0.0  # control RPC hidden under prior pulls
+    throttle_wait_s: float = 0.0    # admission token-bucket wait charged
     clock_s: float = 0.0            # this stream's serial transport time
 
 
@@ -93,6 +109,20 @@ class ClusterStats:
         return charged
 
     @property
+    def control_rpc_s(self) -> float:
+        return sum(s.control_rpc_s for s in self.streams)
+
+    @property
+    def prefetch_overlap_s(self) -> float:
+        """Lease-RPC time hidden under RDMA pulls by the prefetch slot —
+        the critical path shrinks by exactly the slowest stream's share."""
+        return sum(s.prefetch_overlap_s for s in self.streams)
+
+    @property
+    def throttle_wait_s(self) -> float:
+        return sum(s.throttle_wait_s for s in self.streams)
+
+    @property
     def resumes(self) -> int:
         return sum(s.resumes for s in self.streams)
 
@@ -120,16 +150,20 @@ class StreamPuller:
     """One endpoint's resumable lease-driven pull loop."""
 
     def __init__(self, coordinator: ClusterCoordinator, endpoint: Endpoint,
-                 pool: BufferPool | None = None, max_resumes: int = 3):
+                 pool: BufferPool | None = None, max_resumes: int = 3,
+                 prefetch: bool = True, client_id: str = "default"):
         self.coordinator = coordinator
         self.endpoint = endpoint
         self.server = coordinator.server(endpoint.server_id)
         self.pool = pool
         self.max_resumes = max_resumes
+        self.prefetch = prefetch
+        self.client_id = client_id
         self.stats = StreamStats(server_id=endpoint.server_id)
         self.delivered = 0
         self.drained = False
-        self._handle = coordinator.open_stream(endpoint)
+        self._prefetch_budget_s = 0.0   # prior pull's wire time still hideable
+        self._handle = coordinator.open_stream(endpoint, client_id=client_id)
         self._lease_out: list[tuple[RecordBatch, bulk_mod.BulkHandle | None]] = []
 
     # ------------------------------------------------------------- do_rdma
@@ -141,6 +175,16 @@ class StreamPuller:
             self.server.fabric, self._handle.schema, num_rows, remote,
             pool=self.pool, pin=True)
         s = self.stats
+        # the per-batch control message (descriptor RPC) the server charges
+        # to the fabric; with the prefetch slot armed, the RPC for this batch
+        # was posted while the previous batch's RDMA pull was in flight, so
+        # only the un-hidden remainder lands on the stream clock
+        cfg = self.server.fabric.config
+        meta_bytes = 64 + 8 * sum(len(v) for v in sizes)
+        rpc_s = cfg.rpc_rtt_s + meta_bytes / cfg.rpc_bw
+        hidden = (min(rpc_s, self._prefetch_budget_s)
+                  if self.prefetch and s.batches > 0 else 0.0)
+        self._prefetch_budget_s = stats.wire.modeled_wire_s
         s.batches += 1
         s.bytes += stats.wire.bytes_moved
         s.segments += stats.wire.num_segments
@@ -150,7 +194,9 @@ class StreamPuller:
         s.deserialize_s += stats.deserialize_s
         s.modeled_wire_s += stats.wire.modeled_wire_s
         s.modeled_register_s += stats.wire.modeled_register_s
-        s.clock_s += stats.total_s
+        s.control_rpc_s += rpc_s - hidden
+        s.prefetch_overlap_s += hidden
+        s.clock_s += stats.total_s + (rpc_s - hidden)
         self._lease_out.append(
             (batch, local if self.pool is not None else None))
         return stats
@@ -169,6 +215,13 @@ class StreamPuller:
             if lease_batches <= 0:
                 self._finish()
                 return []
+        admission = self.coordinator.admission
+        if admission is not None:
+            # token-bucket lease metering: a throttled grant charges its
+            # modeled wait to this stream's clock (backpressure signal)
+            wait = admission.lease_wait_s(self.stats.clock_s, 1)
+            self.stats.throttle_wait_s += wait
+            self.stats.clock_s += wait
         self._lease_out = []
         for attempt in range(self.max_resumes + 1):
             try:
@@ -192,7 +245,8 @@ class StreamPuller:
     def _finish(self) -> None:
         if not self.drained:
             self.drained = True
-            self.coordinator.close_stream(self.endpoint, self._handle.uuid)
+            self.coordinator.close_stream(self.endpoint, self._handle.uuid,
+                                          client_id=self.client_id)
 
 
 class MultiStreamPuller:
@@ -200,16 +254,30 @@ class MultiStreamPuller:
 
     def __init__(self, coordinator: ClusterCoordinator, plan: ScanPlan,
                  pool: BufferPool | None = None, lease_batches: int = 1,
-                 schedule: str = "round_robin", max_resumes: int = 3):
+                 schedule: str = "round_robin", max_resumes: int = 3,
+                 prefetch: bool = True, client_id: str = "default"):
         if schedule not in ("round_robin", "first_ready"):
             raise ValueError(f"unknown schedule {schedule!r}")
         self.plan = plan
         self.pool = pool
+        # snapshot so stats() reports only THIS scan's pool activity even
+        # when the pool is shared across many scans (gateway traffic)
+        self._pool_baseline = (dataclasses.replace(pool.stats)
+                               if pool is not None else None)
         self.lease_batches = lease_batches
         self.schedule = schedule
-        self.pullers = [StreamPuller(coordinator, ep, pool=pool,
-                                     max_resumes=max_resumes)
-                        for ep in plan.endpoints]
+        self.pullers: list[StreamPuller] = []
+        try:
+            for ep in plan.endpoints:
+                self.pullers.append(
+                    StreamPuller(coordinator, ep, pool=pool,
+                                 max_resumes=max_resumes, prefetch=prefetch,
+                                 client_id=client_id))
+        except BaseException:
+            # an admission denial (or open failure) partway through the
+            # fan-out must not leak the streams that did open
+            self._abandon()
+            raise
 
     # ----------------------------------------------------------- iteration
     def batches(self) -> Iterator[tuple[int, RecordBatch]]:
@@ -289,4 +357,5 @@ class MultiStreamPuller:
         return ClusterStats(
             query_id=self.plan.query_id, placement=self.plan.placement,
             streams=[p.stats for p in self.pullers],
-            pool=self.pool.stats if self.pool is not None else None)
+            pool=(self.pool.stats.delta_since(self._pool_baseline)
+                  if self.pool is not None else None))

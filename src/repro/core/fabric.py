@@ -90,6 +90,12 @@ class Fabric:
         self.registrations += num_segments
         return num_segments * self.config.seg_register_s
 
+    def unregister(self, num_segments: int) -> None:
+        """Unpin memory regions (pool eviction under a memory budget).
+        Deregistration is a local verbs call — no wire time is modeled,
+        only the registration census moves."""
+        self.registrations -= num_segments
+
     # ----------------------------------------------------------------- RDMA
     def rdma_pull(self, src: Sequence[np.ndarray],
                   dst: Sequence[np.ndarray],

@@ -21,6 +21,13 @@ Three transports, one knob:
 Resumable cursors in every mode: ``state_dict()``/``load_state_dict()``
 round-trip the cursor through the checkpoint manifest. Cluster mode tracks
 *per-stream* offsets (the merged order is only defined per stream).
+
+Cluster mode is admission-aware: pass a ``qos.AdmissionController`` (plus a
+``client_id``) and every stream lease is granted through it. A denied grant
+— stream quota hit, registered-memory budget exhausted — surfaces to the
+caller as :class:`repro.qos.Backpressure` with a ``retry_after_s`` hint;
+the loader's cursor state is unchanged, so the caller simply waits and
+re-iterates (or narrows ``num_streams`` under its quota).
 """
 from __future__ import annotations
 
@@ -51,7 +58,8 @@ class ThallusLoader:
                  seq_len: int, batch_seqs: int, transport: str = "thallus",
                  straggler_deadline_s: float = 0.5, start_batch: int = 0,
                  num_streams: int | None = None, use_pool: bool = True,
-                 placement: str = "replica"):
+                 placement: str = "replica", admission=None,
+                 client_id: str = "loader"):
         if not servers:
             raise ValueError("need at least one server")
         if transport not in ("thallus", "rpc", "cluster"):
@@ -66,6 +74,8 @@ class ThallusLoader:
         self.num_streams = num_streams
         self.use_pool = use_pool
         self.placement = placement
+        self.admission = admission
+        self.client_id = client_id
         self.stats = LoaderStats()
         self._offset = start_batch
         self._stream_offsets: list[int] = []
@@ -126,7 +136,7 @@ class ThallusLoader:
         With the pool on, a yielded batch's buffers are recycled once the
         next batch is requested, so ``__iter__`` copies the token block out
         (the np.stack that builds training chunks copies regardless)."""
-        coordinator = ClusterCoordinator()
+        coordinator = ClusterCoordinator(admission=self.admission)
         for i, server in enumerate(self.servers):
             coordinator.add_server(f"s{i}", server)
         plan = coordinator.plan(self.sql, self.dataset,
@@ -147,25 +157,33 @@ class ThallusLoader:
             for ep, off in zip(plan.endpoints, offsets))
         plan = dataclasses.replace(plan, endpoints=endpoints)
         pool = BufferPool(self.servers[0].fabric) if self.use_pool else None
+        # Backpressure from an admission controller propagates from here:
+        # no lease opened yet counts against the cursor, so the caller can
+        # retry after `retry_after_s` with state intact
         puller = MultiStreamPuller(coordinator, plan, pool=pool,
-                                   schedule="round_robin")
+                                   schedule="round_robin",
+                                   client_id=self.client_id)
         self._stream_offsets = offsets
         skip = self._offset - sum(offsets)   # global offset not yet mapped
         if skip < 0:
             raise ValueError(
                 f"inconsistent checkpoint: batch_offset={self._offset} < "
                 f"sum(stream_offsets)={sum(offsets)}")
-        for idx, batch in puller.batches():
-            self._stream_offsets[idx] += 1
-            if skip > 0:        # already consumed before this incarnation
-                skip -= 1
-                continue
-            self._offset += 1
-            self.stats.batches += 1
-            yield batch
-        cluster = puller.stats()
-        self.stats.stream_resumes += cluster.resumes
-        self.stats.transport_s += cluster.critical_path_s
+        try:
+            for idx, batch in puller.batches():
+                self._stream_offsets[idx] += 1
+                if skip > 0:    # already consumed before this incarnation
+                    skip -= 1
+                    continue
+                self._offset += 1
+                self.stats.batches += 1
+                yield batch
+        finally:
+            # a consumer that stops early (checkpoint-and-exit) still pulled
+            # batches — account whatever transport accrued, drained or not
+            cluster = puller.stats()
+            self.stats.stream_resumes += cluster.resumes
+            self.stats.transport_s += cluster.critical_path_s
 
     def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
         copy_out = self.transport == "cluster" and self.use_pool

@@ -9,14 +9,25 @@ intra-pod on ICI).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:                                  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:                   # pinned jax 0.4.x: Auto is the default
+    AxisType = None
+
+
+def _make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh() -> Mesh:
@@ -27,5 +38,4 @@ def make_host_mesh() -> Mesh:
         if n % m == 0:
             model = m
             break
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((n // model, model), ("data", "model"))

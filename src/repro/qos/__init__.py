@@ -1,0 +1,22 @@
+"""repro.qos: admission control + flow control for the cluster dataplane.
+
+The layer between clients and the
+:class:`~repro.cluster.coordinator.ClusterCoordinator`: per-client stream
+quotas, a registered-memory budget, and token-bucket lease metering
+(:mod:`.admission`); weighted-fair queueing across client classes with
+deadline shedding (:mod:`.queue`); a request-level scatter-gather gateway
+(:mod:`.gateway`); and per-class metrics that compose with ``ClusterStats``
+(:mod:`.metrics`).
+"""
+from __future__ import annotations
+
+from .admission import (  # noqa: F401
+    AdmissionConfig, AdmissionController, AdmissionStats, Backpressure,
+)
+from .gateway import (  # noqa: F401
+    ScanGateway, ScanRequest, ScanResult, reassemble,
+)
+from .metrics import ClassStats, QosStats  # noqa: F401
+from .queue import (  # noqa: F401
+    BATCH, INTERACTIVE, ClientClass, FifoQueue, WeightedFairQueue,
+)

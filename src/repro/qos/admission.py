@@ -1,0 +1,140 @@
+"""Admission control: who may open streams, and how fast leases are granted.
+
+The cluster dataplane (PR 1) lets any client open unbounded streams against
+the coordinator — exactly the regime where Flight-style servers add
+admission control ("Benchmarking Apache Arrow Flight", arXiv:2204.03032)
+and RDMA engines schedule exchange explicitly (arXiv:1502.07169): every
+stream pins registered memory server-side and holds a reader-map lease, so
+an unthrottled heavy client can exhaust both. This module is the gatekeeper:
+
+* **per-client stream quotas** — :meth:`AdmissionController.acquire_stream`
+  counts concurrently open streams per client and raises
+  :class:`Backpressure` (with a ``retry_after_s`` hint) at the quota;
+* **registered-memory budget** — derived from the
+  :class:`~repro.cluster.mempool.BufferPool` budget when a pool is attached:
+  a pool already over its slab budget denies new streams until releases or
+  evictions bring it back under;
+* **token-bucket lease rate** — :meth:`lease_wait_s` meters lease grants in
+  *modeled* time (the repo's wire is modeled, so its flow control is too):
+  a grant beyond the burst capacity returns the modeled wait the caller must
+  charge to its clock, which is how pullers report backpressure upstream.
+
+Everything here is duck-typed against the cluster layer (no imports from
+:mod:`repro.cluster`), so the coordinator can hold an admission controller
+without creating an import cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class Backpressure(Exception):
+    """The admission controller denied a grant; retry after ``retry_after_s``.
+
+    Raised instead of queueing when the caller owns its own retry loop (the
+    loader, an external client). The gateway never lets this escape — it
+    queues or sheds instead.
+    """
+
+    def __init__(self, reason: str, retry_after_s: float = 0.0):
+        super().__init__(f"{reason} (retry after {retry_after_s * 1e3:.3f} ms)")
+        self.reason = reason
+        self.retry_after_s = retry_after_s
+
+
+@dataclasses.dataclass
+class AdmissionConfig:
+    max_streams_per_client: int | None = None   # None == unlimited
+    memory_budget_bytes: int | None = None      # None == derive from pool
+    lease_rate_per_s: float | None = None       # token refill; None == open
+    lease_burst: int = 8                        # bucket capacity (tokens)
+    retry_after_hint_s: float = 1e-3            # Backpressure retry hint
+
+
+@dataclasses.dataclass
+class AdmissionStats:
+    stream_grants: int = 0
+    stream_denials: int = 0          # quota Backpressure raised
+    memory_denials: int = 0          # budget Backpressure raised
+    lease_grants: int = 0            # token-bucket grants (incl. waited)
+    throttle_wait_s: float = 0.0     # modeled wait charged by the bucket
+
+
+class AdmissionController:
+    """Stream quotas + memory budget + token-bucket lease metering.
+
+    ``pool`` is the client-side :class:`~repro.cluster.mempool.BufferPool`
+    whose registered-slab budget backs the memory check (duck-typed: anything
+    with ``max_bytes`` and ``stats.bytes_resident`` works).
+    """
+
+    def __init__(self, config: AdmissionConfig | None = None, pool=None):
+        self.config = config or AdmissionConfig()
+        self.pool = pool
+        self.stats = AdmissionStats()
+        self._active: dict[str, int] = {}        # client_id -> open streams
+        self._tokens = float(self.config.lease_burst)
+        self._bucket_clock_s = 0.0               # modeled time of last refill
+
+    # ------------------------------------------------------------- streams
+    def active_streams(self, client_id: str = "default") -> int:
+        return self._active.get(client_id, 0)
+
+    def acquire_stream(self, client_id: str = "default") -> None:
+        """Grant one concurrent stream to ``client_id`` or raise
+        :class:`Backpressure`. Pairs with :meth:`release_stream`."""
+        quota = self.config.max_streams_per_client
+        if quota is not None and self.active_streams(client_id) >= quota:
+            self.stats.stream_denials += 1
+            raise Backpressure(
+                f"client {client_id!r} at stream quota ({quota})",
+                self.config.retry_after_hint_s)
+        budget = self.memory_budget_bytes
+        if (budget is not None and self.pool is not None
+                and self.pool.stats.bytes_resident > budget):
+            self.stats.memory_denials += 1
+            raise Backpressure(
+                f"registered-memory budget exhausted "
+                f"({self.pool.stats.bytes_resident} > {budget} bytes)",
+                self.config.retry_after_hint_s)
+        self._active[client_id] = self.active_streams(client_id) + 1
+        self.stats.stream_grants += 1
+
+    def release_stream(self, client_id: str = "default") -> None:
+        n = self.active_streams(client_id)
+        if n > 0:
+            self._active[client_id] = n - 1
+
+    # -------------------------------------------------------------- memory
+    @property
+    def memory_budget_bytes(self) -> int | None:
+        if self.config.memory_budget_bytes is not None:
+            return self.config.memory_budget_bytes
+        if self.pool is not None:
+            return getattr(self.pool, "max_bytes", None)
+        return None
+
+    # --------------------------------------------------------- token bucket
+    def lease_wait_s(self, now_s: float, n: int = 1) -> float:
+        """Grant ``n`` lease tokens at modeled time ``now_s``; return the
+        modeled wait before the grant fires (0.0 when the bucket covers it).
+
+        Callers charge the wait to their own modeled clock — streams run on
+        per-stream clocks, so ``now_s`` may jump backwards between callers;
+        the bucket only refills on forward motion."""
+        self.stats.lease_grants += n
+        rate = self.config.lease_rate_per_s
+        if rate is None or rate <= 0:
+            return 0.0
+        if now_s > self._bucket_clock_s:
+            self._tokens = min(float(self.config.lease_burst),
+                               self._tokens + (now_s - self._bucket_clock_s) * rate)
+            self._bucket_clock_s = now_s
+        if self._tokens >= n:
+            self._tokens -= n
+            return 0.0
+        wait = (n - self._tokens) / rate
+        self._tokens = 0.0
+        self._bucket_clock_s = max(self._bucket_clock_s, now_s) + wait
+        self.stats.throttle_wait_s += wait
+        return wait

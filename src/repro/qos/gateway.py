@@ -1,0 +1,233 @@
+"""The scan gateway: request-level scatter-gather behind admission control.
+
+One logical request enters as a :class:`ScanRequest` and leaves as a
+:class:`ScanResult` whose batches are in **global scan order** — the gateway
+plans the query across shard/replica servers, pulls every endpoint
+concurrently through :class:`~repro.cluster.streams.MultiStreamPuller`, and
+reassembles the per-stream deliveries (scatter-gather at the request level,
+not just the batch level). Between submit and grant sit the two QoS layers:
+
+* the :class:`~.queue.WeightedFairQueue` orders grants across client
+  classes (interactive > batch) and sheds requests whose modeled wait
+  exceeds their deadline budget;
+* the :class:`~.admission.AdmissionController` meters lease grants with a
+  token bucket (one token per stream the fan-out opens) and caps each
+  client's *effective parallelism* at its stream quota — a quota-capped
+  request still sees every shard (nothing is silently dropped), its streams
+  are just serialized onto ``quota`` modeled lanes.
+
+Time is modeled: the gateway runs a deterministic clock that advances by
+each request's modeled service time, so grant latency / shedding / fairness
+comparisons reproduce exactly under any machine load. The coordinator handed
+to a gateway should **not** carry its own admission controller — the gateway
+already meters at request granularity, and per-stream metering underneath it
+would double-charge the bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..cluster.mempool import BufferPool
+from ..cluster.plan import ScanPlan
+from ..cluster.coordinator import ClusterCoordinator
+from ..cluster.streams import ClusterStats, MultiStreamPuller
+from ..core.recordbatch import RecordBatch
+from .admission import AdmissionController, Backpressure
+from .metrics import QosStats
+from .queue import ClientClass, FifoQueue, WeightedFairQueue
+
+
+@dataclasses.dataclass
+class ScanRequest:
+    """One logical scan: what a client submits to the gateway."""
+
+    client_id: str
+    klass: str                      # client-class name (queue weight lookup)
+    sql: str
+    dataset: str
+    request_id: int | None = None   # assigned by the gateway when None
+    cost_hint: float = 1.0          # relative service estimate (WFQ units)
+    deadline_s: float | None = None  # shed if modeled wait exceeds this
+    arrival_s: float = 0.0          # modeled arrival time
+    num_streams: int | None = None  # fan-out hint (replica placement)
+
+
+@dataclasses.dataclass
+class ScanResult:
+    request: ScanRequest
+    batches: list[RecordBatch]      # reassembled in global scan order
+    cluster: ClusterStats
+    grant_latency_s: float          # modeled submit -> grant
+    service_s: float                # modeled execution (quota-capped makespan)
+
+
+def reassemble(plan: ScanPlan, per_stream: list[list[RecordBatch]]
+               ) -> list[RecordBatch]:
+    """Merge per-stream deliveries back into global scan order.
+
+    * ``replica`` plans slice the batch range contiguously — concatenate
+      streams by ``start_batch``.
+    * ``shard`` plans come from :meth:`ClusterCoordinator.place_shards`,
+      which deals ``batches[i::n]`` to the i-th sorted server, so stream
+      *i*'s j-th batch is global batch ``j*n + i`` — re-interleave.
+    """
+    if plan.placement == "replica":
+        order = sorted(range(len(plan.endpoints)),
+                       key=lambda i: plan.endpoints[i].start_batch)
+        return [b for i in order for b in per_stream[i]]
+    out: list[RecordBatch] = []
+    j = 0
+    while True:
+        row = [s[j] for s in per_stream if j < len(s)]
+        if not row:
+            return out
+        out.extend(row)
+        j += 1
+
+
+def _copy_batch(batch: RecordBatch) -> RecordBatch:
+    """Deep copy out of pooled buffers (they recycle on the next pull)."""
+    cols = tuple(dataclasses.replace(
+        c, values=c.values.copy(),
+        offsets=None if c.offsets is None else c.offsets.copy(),
+        validity=None if c.validity is None else c.validity.copy())
+        for c in batch.columns)
+    return RecordBatch(batch.schema, cols)
+
+
+def _makespan(clock_s: list[float], parallelism: int | None) -> float:
+    """Modeled completion time of the fan-out under a concurrency cap:
+    longest-processing-time greedy assignment of stream clocks onto
+    ``parallelism`` lanes. With no cap this is the plain critical path."""
+    if parallelism is None or parallelism >= len(clock_s):
+        return max(clock_s, default=0.0)
+    lanes = [0.0] * max(1, parallelism)
+    for c in sorted(clock_s, reverse=True):
+        idx = min(range(len(lanes)), key=lanes.__getitem__)
+        lanes[idx] += c
+    return max(lanes)
+
+
+class ScanGateway:
+    """Admission-controlled front door for every scan against the cluster."""
+
+    def __init__(self, coordinator: ClusterCoordinator,
+                 classes: list[ClientClass] | None = None,
+                 admission: AdmissionController | None = None,
+                 pool: BufferPool | None = None, fair: bool = True,
+                 lease_batches: int = 1, prefetch: bool = True,
+                 est_service_s_per_cost: float = 1e-4):
+        self.coordinator = coordinator
+        self.admission = admission
+        self.pool = pool
+        self.lease_batches = lease_batches
+        self.prefetch = prefetch
+        self.queue = WeightedFairQueue(classes) if fair else FifoQueue()
+        self.stats = QosStats()
+        self.results: dict[int, ScanResult] = {}
+        self.clock_s = 0.0
+        self._next_id = 0
+        # calibration: WFQ cost units -> modeled seconds, refined as we serve
+        self._service_s_per_cost = est_service_s_per_cost
+
+    # --------------------------------------------------------------- submit
+    def submit(self, request: ScanRequest) -> ScanRequest | None:
+        """Enqueue a request. Returns the (id-assigned) request, or ``None``
+        when it was shed at submit time: the modeled wait ahead of it —
+        queued cost that WFQ will serve first, at the calibrated service
+        rate — already exceeds its deadline budget."""
+        if request.request_id is None:
+            request = dataclasses.replace(request, request_id=self._next_id)
+        self._next_id = max(self._next_id, request.request_id) + 1
+        cstats = self.stats.klass(request.klass)
+        cstats.submitted += 1
+        if request.deadline_s is not None:
+            tag = self.queue.would_finish(request.klass, request.cost_hint)
+            est_wait = (max(0.0, self.clock_s - request.arrival_s)
+                        + self.queue.backlog_before(tag)
+                        * self._service_s_per_cost)
+            if est_wait > request.deadline_s:
+                cstats.shed += 1
+                return None
+        self.queue.push(request, request.klass, request.cost_hint)
+        self.stats.queue_depth_max = max(self.stats.queue_depth_max,
+                                         len(self.queue))
+        return request
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> list[ScanResult]:
+        """Drain the queue in fair order; returns results in grant order."""
+        granted: list[ScanResult] = []
+        while len(self.queue):
+            request = self.queue.pop()
+            cstats = self.stats.klass(request.klass)
+            waited = self.clock_s - request.arrival_s
+            if request.deadline_s is not None and waited > request.deadline_s:
+                cstats.shed += 1          # deadline expired while queued
+                continue
+            try:
+                result = self._execute(request)
+            except Backpressure:
+                # a coordinator-level admission denial (a gateway-bypassing
+                # config); treat as a shed rather than crashing the drain
+                cstats.shed += 1
+                continue
+            except Exception:
+                # one malformed request (bad SQL, unknown dataset, an
+                # impossible num_streams hint) must not abort the drain and
+                # take every other client's queued work with it
+                cstats.failed += 1
+                continue
+            granted.append(result)
+            self.results[request.request_id] = result
+        self.stats.makespan_s = self.clock_s
+        if self.admission is not None:
+            self.stats.throttle_wait_s = self.admission.stats.throttle_wait_s
+        return granted
+
+    def result(self, request_id: int) -> ScanResult | None:
+        return self.results.get(request_id)
+
+    # -------------------------------------------------------------- execute
+    def _execute(self, request: ScanRequest) -> ScanResult:
+        quota = (self.admission.config.max_streams_per_client
+                 if self.admission is not None else None)
+        num_streams = request.num_streams
+        if (quota is not None and
+                self.coordinator.placement_mode(request.dataset) == "replica"):
+            # replica fan-out is elastic: plan no wider than the quota
+            hosts = len(self.coordinator.hosts(request.dataset))
+            num_streams = min(num_streams or hosts, quota)
+        plan = self.coordinator.plan(request.sql, request.dataset,
+                                     num_streams=num_streams)
+        if self.admission is not None:
+            # one lease token per stream the fan-out opens
+            self.clock_s += self.admission.lease_wait_s(
+                self.clock_s, len(plan.endpoints))
+        grant_latency = self.clock_s - request.arrival_s
+        puller = MultiStreamPuller(
+            self.coordinator, plan, pool=self.pool,
+            lease_batches=self.lease_batches, prefetch=self.prefetch,
+            client_id=request.client_id)
+        per_stream: list[list[RecordBatch]] = [[] for _ in plan.endpoints]
+
+        def sink(idx: int, batch: RecordBatch) -> None:
+            per_stream[idx].append(
+                _copy_batch(batch) if self.pool is not None else batch)
+
+        cluster = puller.run(sink)
+        service = _makespan([s.clock_s for s in cluster.streams], quota)
+        self.clock_s += service
+        cstats = self.stats.klass(request.klass)
+        cstats.granted += 1
+        cstats.grant_latency_s.append(grant_latency)
+        cstats.service_s += service
+        cstats.bytes += cluster.bytes
+        cstats.batches += cluster.batches
+        self.stats.cluster.append(cluster)
+        # refine the cost->seconds calibration (EMA over served requests)
+        observed = service / max(request.cost_hint, 1e-12)
+        self._service_s_per_cost = (0.5 * self._service_s_per_cost
+                                    + 0.5 * observed)
+        return ScanResult(request, reassemble(plan, per_stream), cluster,
+                          grant_latency, service)

@@ -1,0 +1,107 @@
+"""QoS observability: per-class service metrics that compose with ClusterStats.
+
+Every granted request carries its own
+:class:`~repro.cluster.streams.ClusterStats` (the dataplane decomposition);
+:class:`QosStats` is the layer above — queue depth, grant latency, shed
+counts and per-class throughput — so a benchmark row can report "interactive
+p50 grant latency under heavy batch load" next to "bytes over the wire" from
+one object.
+
+Latencies and service times are **modeled seconds** (the gateway's clock),
+which keeps every fairness comparison deterministic under any machine load —
+the same trick :attr:`ClusterStats.modeled_critical_path_s` uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:   # avoid a hard qos -> cluster import edge for typing only
+    from ..cluster.streams import ClusterStats
+
+
+def _quantile(values: list[float], q: float) -> float:
+    if not values:
+        return 0.0
+    ordered = sorted(values)
+    idx = min(len(ordered) - 1, max(0, int(round(q * (len(ordered) - 1)))))
+    return ordered[idx]
+
+
+@dataclasses.dataclass
+class ClassStats:
+    """One client class's view of the gateway."""
+
+    name: str
+    submitted: int = 0
+    granted: int = 0
+    shed: int = 0                  # deadline-based rejections
+    failed: int = 0                # malformed requests (planner/exec errors)
+    grant_latency_s: list[float] = dataclasses.field(default_factory=list)
+    service_s: float = 0.0         # modeled service time consumed
+    bytes: int = 0                 # from the per-request ClusterStats
+    batches: int = 0
+
+    @property
+    def p50_grant_latency_s(self) -> float:
+        return _quantile(self.grant_latency_s, 0.5)
+
+    @property
+    def max_grant_latency_s(self) -> float:
+        return max(self.grant_latency_s, default=0.0)
+
+    @property
+    def throughput_bytes_per_s(self) -> float:
+        """Class throughput over the service time it actually consumed."""
+        return self.bytes / self.service_s if self.service_s > 0 else 0.0
+
+
+@dataclasses.dataclass
+class QosStats:
+    """Aggregate gateway metrics across classes + the per-request dataplane
+    stats they compose with."""
+
+    classes: dict[str, ClassStats] = dataclasses.field(default_factory=dict)
+    queue_depth_max: int = 0
+    throttle_wait_s: float = 0.0        # token-bucket wait (admission)
+    makespan_s: float = 0.0             # gateway clock when the queue drained
+    cluster: list["ClusterStats"] = dataclasses.field(default_factory=list)
+
+    def klass(self, name: str) -> ClassStats:
+        if name not in self.classes:
+            self.classes[name] = ClassStats(name)
+        return self.classes[name]
+
+    @property
+    def submitted(self) -> int:
+        return sum(c.submitted for c in self.classes.values())
+
+    @property
+    def granted(self) -> int:
+        return sum(c.granted for c in self.classes.values())
+
+    @property
+    def shed(self) -> int:
+        return sum(c.shed for c in self.classes.values())
+
+    @property
+    def failed(self) -> int:
+        return sum(c.failed for c in self.classes.values())
+
+    @property
+    def bytes(self) -> int:
+        return sum(c.bytes for c in self.classes.values())
+
+    def summary(self) -> str:
+        """One benchmark-row string: the acceptance-criteria numbers."""
+        parts = [f"depth_max={self.queue_depth_max}", f"shed={self.shed}",
+                 f"failed={self.failed}",
+                 f"throttle_us={self.throttle_wait_s * 1e6:.1f}",
+                 f"makespan_us={self.makespan_s * 1e6:.1f}"]
+        for name in sorted(self.classes):
+            c = self.classes[name]
+            parts.append(
+                f"{name}[n={c.granted}/{c.submitted} "
+                f"p50_grant_us={c.p50_grant_latency_s * 1e6:.1f} "
+                f"tput_MBps={c.throughput_bytes_per_s / 1e6:.1f}]")
+        return " ".join(parts)

@@ -7,6 +7,14 @@ they emit EOS or hit ``max_new_tokens``. Freed slots are refilled from the
 queue at the next cohort boundary. Responses leave the server as record
 batches over the Thallus transport (the paper's protocol in the serving
 direction).
+
+Prompt ingestion rides the qos gateway: :meth:`Batcher.submit_scan` turns a
+prompt-table query into one logical :class:`~repro.qos.ScanRequest` — the
+gateway fans it out across shard servers, pulls the streams concurrently,
+reassembles them in scan order, and :meth:`Batcher.ingest_batches` converts
+the resulting token batches into decode requests. Serving traffic thereby
+competes under the same weighted-fair admission as every other client
+(interactive class by default) instead of bypassing the reader map.
 """
 from __future__ import annotations
 
@@ -53,6 +61,38 @@ class Batcher:
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    # -- qos-gateway ingestion ---------------------------------------------
+    def submit_scan(self, gateway, sql: str, dataset: str, *,
+                    client_id: str = "serving", klass: str = "interactive",
+                    cost_hint: float = 1.0, deadline_s: float | None = None,
+                    num_streams: int | None = None):
+        """Submit the prompt-fetch scan as one logical gateway request.
+        Returns the id-assigned :class:`~repro.qos.ScanRequest`, or ``None``
+        when the gateway shed it at submit (deadline would be blown).
+        Run the gateway, then feed ``gateway.result(req.request_id)`` to
+        :meth:`ingest_batches`."""
+        from ..qos import ScanRequest   # serving -> qos only on this path
+        return gateway.submit(ScanRequest(
+            client_id=client_id, klass=klass, sql=sql, dataset=dataset,
+            cost_hint=cost_hint, deadline_s=deadline_s,
+            num_streams=num_streams))
+
+    def ingest_batches(self, batches, seq_len: int, *,
+                       max_new_tokens: int = 16, eos_id: int | None = None,
+                       start_id: int = 0) -> int:
+        """Turn reassembled token record batches (a gateway ``ScanResult``'s
+        payload) into decode requests, one per sequence, in scan order.
+        Returns the number of requests enqueued."""
+        from ..data.tokens import batch_to_tokens
+        rid = start_id
+        for rb in batches:
+            for seq in batch_to_tokens(rb, seq_len):
+                self.submit(Request(rid, np.asarray(seq, np.int32).copy(),
+                                    max_new_tokens=max_new_tokens,
+                                    eos_id=eos_id))
+                rid += 1
+        return rid - start_id
 
     def _next_cohort(self) -> list[Request]:
         cohort = []

@@ -1,4 +1,7 @@
-"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from dryrun artifacts."""
+"""Render EXPERIMENTS.md tables: dryrun/roofline artifacts, plus the
+transport-side buffer-pool and qos summaries (duck-typed against
+``repro.cluster.PoolStats`` / ``repro.qos.QosStats`` so this module stays
+dependency-free)."""
 from __future__ import annotations
 
 import glob
@@ -74,6 +77,40 @@ def dryrun_table(arts: list[dict], mesh: str) -> str:
             f"{a['memory']['temp_bytes']/2**30:.2f} | "
             f"{lc['flops']:.2e} | {lc['bytes']:.2e} | {counts} | "
             f"{lc['collective_wire_bytes']/2**20:.0f} |")
+    return "\n".join(rows)
+
+
+def pool_table(stats) -> str:
+    """One-row markdown table for a ``repro.cluster.PoolStats``."""
+    rows = ["| hit rate | hits | misses | slabs | resident MiB | "
+            "evictions | evicted MiB | registered segs | register us |",
+            "|---|---|---|---|---|---|---|---|---|",
+            f"| {stats.hit_rate:.2f} | {stats.hits} | {stats.misses} | "
+            f"{stats.slabs_created} | {stats.bytes_resident / 2**20:.2f} | "
+            f"{stats.evictions} | {stats.bytes_evicted / 2**20:.2f} | "
+            f"{stats.registered_segments} | "
+            f"{stats.modeled_register_s * 1e6:.1f} |"]
+    return "\n".join(rows)
+
+
+def qos_table(qos) -> str:
+    """Per-class markdown table for a ``repro.qos.QosStats`` (grant latency,
+    sheds, throughput), with the gateway-level counters in a footer row."""
+    rows = ["| class | granted | shed | p50 grant ms | max grant ms | "
+            "throughput MB/s | bytes |",
+            "|---|---|---|---|---|---|---|"]
+    for name in sorted(qos.classes):
+        c = qos.classes[name]
+        rows.append(
+            f"| {name} | {c.granted}/{c.submitted} | {c.shed} | "
+            f"{c.p50_grant_latency_s * 1e3:.3f} | "
+            f"{c.max_grant_latency_s * 1e3:.3f} | "
+            f"{c.throughput_bytes_per_s / 1e6:.1f} | {c.bytes} |")
+    rows.append(
+        f"| *gateway* | {qos.granted}/{qos.submitted} | {qos.shed} | "
+        f"depth_max={qos.queue_depth_max} | "
+        f"throttle={qos.throttle_wait_s * 1e3:.3f} | "
+        f"makespan={qos.makespan_s * 1e3:.3f} | {qos.bytes} |")
     return "\n".join(rows)
 
 

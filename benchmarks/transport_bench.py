@@ -20,9 +20,19 @@ summary (queue depth, shed count, per-class throughput). The acceptance
 check: with quotas enabled, the interactive class's p50 grant latency drops
 under the same heavy-client load.
 
+Sched axes (the ``repro.sched`` adaptive scheduler), both self-asserting so
+CI smoke runs double as acceptance checks:
+
+* ``--scenario straggler`` — one 4×-slow replica in a 4-replica scan, work
+  stealing off vs on. Asserts stealing cuts the modeled critical path by
+  ≥ 1.5× (the straggler's remaining range migrates to idle fast replicas).
+* ``--scenario sharing`` — N=4 identical queued queries, shared tickets off
+  vs on. Asserts the coalesced run costs < 2× ONE query's server-side work
+  (one fan-out executes; three subscribers are served by multicast).
+
 Runnable standalone::
 
-    PYTHONPATH=src python benchmarks/transport_bench.py --scenario contention
+    PYTHONPATH=src python benchmarks/transport_bench.py --scenario straggler
 """
 from __future__ import annotations
 
@@ -36,11 +46,14 @@ if __package__ in (None, ""):          # `python benchmarks/transport_bench.py`
 else:
     from .common import Row, calibrated_fabric
 
-from repro.cluster import BufferPool, ClusterCoordinator, cluster_scan
-from repro.core import Fabric, RpcClient, ThallusClient, ThallusServer
+from repro.cluster import (BufferPool, ClusterCoordinator, MultiStreamPuller,
+                           cluster_scan)
+from repro.core import (Fabric, FabricConfig, RpcClient, ThallusClient,
+                        ThallusServer)
 from repro.engine import Engine, make_numeric_table
 from repro.qos import (AdmissionConfig, AdmissionController, ClientClass,
                        ScanGateway, ScanRequest)
+from repro.sched import AdaptiveScheduler, StealConfig, TicketTable
 
 TOTAL_COLS = 8
 CLUSTER_ROWS = 1 << 20
@@ -48,6 +61,9 @@ CLUSTER_BATCH_ROWS = 1 << 15
 CONTENTION_ROWS = 1 << 18
 CONTENTION_BATCH_ROWS = 1 << 14
 CONTENTION_SHARDS = 4
+STRAGGLER_REPLICAS = 4
+STRAGGLER_SLOWDOWN = 4.0
+SHARING_QUERIES = 4
 
 
 def _server(nrows: int) -> ThallusServer:
@@ -167,9 +183,104 @@ def run_contention() -> list[Row]:
     return rows
 
 
+def run_straggler() -> list[Row]:
+    """One slow replica × stealing on/off. Self-asserting: stealing must
+    recover ≥ 1.5× of the modeled critical path the straggler costs."""
+    base_cfg = calibrated_fabric().config
+    table = make_numeric_table("t", CLUSTER_ROWS, TOTAL_COLS,
+                               batch_rows=CLUSTER_BATCH_ROWS)
+    sql = "SELECT " + ", ".join(f"c{i}" for i in range(TOTAL_COLS)) + " FROM t"
+
+    def make_coord() -> ClusterCoordinator:
+        coord = ClusterCoordinator()
+        for i in range(STRAGGLER_REPLICAS):
+            cfg = base_cfg
+            if i == STRAGGLER_REPLICAS - 1:     # the straggler
+                cfg = FabricConfig(
+                    rpc_bw=base_cfg.rpc_bw / STRAGGLER_SLOWDOWN,
+                    rdma_bw=base_cfg.rdma_bw / STRAGGLER_SLOWDOWN)
+            coord.add_server(f"s{i}", ThallusServer(Engine(), Fabric(cfg)))
+        coord.place_replicas("/d", table)
+        return coord
+
+    rows: list[Row] = []
+    critical: dict[bool, float] = {}
+    for stealing in (False, True):
+        coord = make_coord()
+        plan = coord.plan(sql, "/d")
+        scheduler = AdaptiveScheduler(steal=StealConfig())
+        puller = (scheduler.make_puller(coord, plan) if stealing
+                  else MultiStreamPuller(coord, plan,
+                                         schedule="first_ready"))
+        stats = puller.run()
+        critical[stealing] = stats.modeled_critical_path_s
+        rows.append(Row(
+            f"straggler_steal{int(stealing)}",
+            stats.modeled_critical_path_s * 1e6,
+            f"replicas={STRAGGLER_REPLICAS} "
+            f"slowdown={STRAGGLER_SLOWDOWN:g}x steals={stats.steals} "
+            f"streams={len(stats.streams)} batches={stats.batches} "
+            f"work_us={stats.sum_total_s * 1e6:.1f}"))
+    speedup = critical[False] / critical[True]
+    rows.append(Row("straggler_speedup", speedup,
+                    f"modeled critical path, stealing off/on; want >= 1.5"))
+    assert speedup >= 1.5, (
+        f"work stealing recovered only {speedup:.2f}x of the straggler's "
+        f"critical path (acceptance floor: 1.5x)")
+    return rows
+
+
+def run_sharing() -> list[Row]:
+    """N identical queued queries × shared tickets on/off. Self-asserting:
+    with tickets, N queries must cost < 2× one query's server-side work."""
+    base_cfg = calibrated_fabric().config
+    table = make_numeric_table("t", CONTENTION_ROWS, TOTAL_COLS,
+                               batch_rows=CONTENTION_BATCH_ROWS)
+    sql = "SELECT " + ", ".join(f"c{i}" for i in range(TOTAL_COLS)) + " FROM t"
+
+    def server_side_work(tickets: bool) -> tuple[float, Row]:
+        coord = ClusterCoordinator()
+        for i in range(CONTENTION_SHARDS):
+            coord.add_server(f"s{i}", ThallusServer(Engine(),
+                                                    Fabric(base_cfg)))
+        coord.place_shards("/d", table)
+        scheduler = (AdaptiveScheduler(tickets=TicketTable())
+                     if tickets else None)
+        gateway = ScanGateway(coord, scheduler=scheduler)
+        for i in range(SHARING_QUERIES):
+            gateway.submit(ScanRequest(f"c{i}", "interactive", sql, "/d"))
+        gateway.run()
+        qos = gateway.stats
+        # server-side work: modeled wire time summed over every fan-out
+        # that actually executed (multicast hits run none)
+        work = sum(c.modeled_wire_s for c in qos.cluster)
+        row = Row(
+            f"sharing_tickets{int(tickets)}", work * 1e6,
+            f"queries={SHARING_QUERIES} fanouts={len(qos.cluster)} "
+            f"ticket_hits={qos.ticket_hits} granted={qos.granted} "
+            f"delivered_bytes={qos.bytes}")
+        assert qos.granted == SHARING_QUERIES
+        return work, row
+
+    work_off, row_off = server_side_work(False)
+    work_on, row_on = server_side_work(True)
+    one_query = work_off / SHARING_QUERIES
+    ratio = work_on / one_query
+    rows = [row_off, row_on,
+            Row("sharing_work_ratio", ratio,
+                f"N={SHARING_QUERIES} identical queries vs 1 query's "
+                f"server-side work; want < 2")]
+    assert ratio < 2.0, (
+        f"shared tickets left server-side work at {ratio:.2f}x one query "
+        f"(acceptance ceiling: 2x)")
+    return rows
+
+
 _SCENARIOS = {"fig2": lambda transport: run(transport),
               "cluster": lambda transport: run_cluster(),
-              "contention": lambda transport: run_contention()}
+              "contention": lambda transport: run_contention(),
+              "straggler": lambda transport: run_straggler(),
+              "sharing": lambda transport: run_sharing()}
 
 
 def main() -> None:
@@ -187,7 +298,8 @@ def main() -> None:
     if args.cluster_only:
         scenarios = ["cluster"]
     elif args.scenario == "all":
-        scenarios = ["fig2", "contention"]   # fig2 already appends cluster
+        # fig2 already appends cluster
+        scenarios = ["fig2", "contention", "straggler", "sharing"]
     elif args.scenario is not None:
         scenarios = [args.scenario]
     else:

@@ -3,19 +3,26 @@
 Builds a columnar dataset, runs a SQL query on the server, streams the
 results to a client over BOTH transports, prints the paper's headline
 comparison (zero-copy vs serialize), scales the same scan out as a
-partitioned multi-stream pull through the ``repro.cluster`` dataplane, and
-finally routes contending clients through the ``repro.qos`` gateway so a
-heavy batch scan cannot starve interactive traffic.
+partitioned multi-stream pull through the ``repro.cluster`` dataplane,
+routes contending clients through the ``repro.qos`` gateway so a heavy
+batch scan cannot starve interactive traffic, and finally turns on the
+``repro.sched`` adaptive scheduler: a 4×-slow replica is rescued by work
+stealing, identical queued queries coalesce onto a shared ticket, and an
+interactive arrival preempts a batch scan at a lease boundary.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.cluster import BufferPool, ClusterCoordinator, cluster_scan
-from repro.core import Fabric, RpcClient, ThallusClient, ThallusServer
+from repro.cluster import (BufferPool, ClusterCoordinator, MultiStreamPuller,
+                           cluster_scan)
+from repro.core import (Fabric, FabricConfig, RpcClient, ThallusClient,
+                        ThallusServer)
 from repro.engine import Engine, make_numeric_table
 from repro.qos import (AdmissionConfig, AdmissionController, ClientClass,
                        ScanGateway, ScanRequest)
+from repro.sched import AdaptiveScheduler, StealConfig
+from repro.utils.report import sched_table
 
 
 def main() -> None:
@@ -102,6 +109,56 @@ def main() -> None:
     got = np.concatenate([b.column("c1").values for b in result.batches])
     np.testing.assert_array_equal(np.sort(got), np.sort(a))
     print("gateway scatter-gather agrees with the single-stream result")
+
+    # -- sched: work stealing rescues a 4x-slow replica ---------------------
+    # finer batches than the paper demo: stealing needs enough remaining
+    # range (>= StealConfig.min_batches) to be worth a lease migration
+    table = make_numeric_table("events", 1 << 18, 8, batch_rows=1 << 13)
+
+    def replica_coordinator():
+        coord = ClusterCoordinator()
+        for i in range(4):
+            cfg = FabricConfig()
+            if i == 3:    # the straggler
+                cfg = FabricConfig(rpc_bw=cfg.rpc_bw / 4,
+                                   rdma_bw=cfg.rdma_bw / 4)
+            coord.add_server(f"s{i}", ThallusServer(Engine(), Fabric(cfg)))
+        coord.place_replicas("/data/events", table)
+        return coord
+
+    coord = replica_coordinator()
+    static = MultiStreamPuller(coord, coord.plan(sql, "/data/events"),
+                               schedule="first_ready").run()
+    coord = replica_coordinator()
+    scheduler = AdaptiveScheduler.default()
+    stolen = scheduler.make_puller(coord,
+                                   coord.plan(sql, "/data/events")).run()
+    print(f"sched: one replica 4x slow — modeled critical path "
+          f"{static.modeled_critical_path_s*1e3:.2f} ms static vs "
+          f"{stolen.modeled_critical_path_s*1e3:.2f} ms with "
+          f"{stolen.steals} steal(s) "
+          f"({static.modeled_critical_path_s / stolen.modeled_critical_path_s:.2f}x)")
+    for ev in stolen.steal_events:
+        print(f"  stole batches [{ev.start_batch}, "
+              f"{ev.start_batch + ev.num_batches}) from {ev.victim} "
+              f"-> {ev.thief} at t={ev.epoch_s*1e3:.2f} ms")
+
+    # -- sched: shared tickets + lease-boundary preemption ------------------
+    sched_gateway = ScanGateway(replica_coordinator(), scheduler=scheduler)
+    heavy_sql = ("SELECT " + ", ".join(f"c{i}" for i in range(8))
+                 + " FROM events")
+    sched_gateway.submit(ScanRequest("trainer", "batch", heavy_sql,
+                                     "/data/events", cost_hint=8.0))
+    for i in range(3):    # identical dashboards arriving mid-scan coalesce
+        sched_gateway.submit(ScanRequest(f"dash{i}", "interactive", sql,
+                                         "/data/events", arrival_s=1e-5))
+    sched_gateway.run()
+    qos = sched_gateway.stats
+    print(f"sched: {qos.granted} granted — {qos.ticket_hits} multicast "
+          f"ticket hit(s) (one fan-out served {1 + qos.ticket_hits} "
+          f"dashboards), {qos.preemptions} preemption(s) parked the heavy "
+          f"scan at a lease boundary, {qos.steals} steal(s) mid-query")
+    print(sched_table(qos))
 
 
 if __name__ == "__main__":

@@ -133,6 +133,17 @@ class ClusterCoordinator:
             endpoint.sql, endpoint.dataset,
             start_batch=endpoint.start_batch + delivered)
 
+    def reopen_stream(self, endpoint: Endpoint, delivered: int,
+                      client_id: str = "default") -> ScanHandle:
+        """Resume a *parked* stream (lease-boundary preemption, see
+        :mod:`repro.sched.preempt`). Unlike :meth:`resume_stream`, parking
+        released the admission slot back to the budget, so the re-open is a
+        fresh admission-gated grant — it may raise ``qos.Backpressure``."""
+        return self.open_stream(
+            dataclasses.replace(
+                endpoint, start_batch=endpoint.start_batch + delivered),
+            client_id=client_id)
+
     def close_stream(self, endpoint: Endpoint, uid: str,
                      client_id: str = "default") -> None:
         if self.admission is not None:

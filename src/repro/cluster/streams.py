@@ -68,6 +68,9 @@ class StreamStats:
     prefetch_overlap_s: float = 0.0  # control RPC hidden under prior pulls
     throttle_wait_s: float = 0.0    # admission token-bucket wait charged
     clock_s: float = 0.0            # this stream's serial transport time
+    start_s: float = 0.0            # modeled epoch the stream began (a stolen
+    #                                 stream starts mid-scan, not at t=0)
+    parks: int = 0                  # lease-boundary preemptions survived
 
 
 @dataclasses.dataclass
@@ -78,6 +81,17 @@ class ClusterStats:
     placement: str = ""
     streams: list[StreamStats] = dataclasses.field(default_factory=list)
     pool: PoolStats | None = None
+    # work-stealing audit trail (repro.sched.StealEvent instances; kept
+    # duck-typed so cluster does not import sched)
+    steal_events: list = dataclasses.field(default_factory=list)
+
+    @property
+    def steals(self) -> int:
+        return len(self.steal_events)
+
+    @property
+    def parks(self) -> int:
+        return sum(s.parks for s in self.streams)
 
     @property
     def batches(self) -> int:
@@ -136,14 +150,17 @@ class ClusterStats:
         """Cluster transport duration: streams run concurrently, so the scan
         finishes when the slowest stream does. Includes each stream's
         measured client CPU time (alloc/assembly), so it is wall-clock-noisy;
-        use :attr:`modeled_critical_path_s` for deterministic comparisons."""
-        return max((s.clock_s for s in self.streams), default=0.0)
+        use :attr:`modeled_critical_path_s` for deterministic comparisons.
+        A stream's finish time is its start epoch plus its own clock — a
+        stolen stream begins mid-scan, so its ``start_s`` is nonzero."""
+        return max((s.start_s + s.clock_s for s in self.streams), default=0.0)
 
     @property
     def modeled_critical_path_s(self) -> float:
         """Slowest stream by modeled wire time only — a pure function of
         bytes/segments/ops, reproducible under any machine load."""
-        return max((s.modeled_wire_s for s in self.streams), default=0.0)
+        return max((s.start_s + s.modeled_wire_s for s in self.streams),
+                   default=0.0)
 
 
 class StreamPuller:
@@ -162,9 +179,65 @@ class StreamPuller:
         self.stats = StreamStats(server_id=endpoint.server_id)
         self.delivered = 0
         self.drained = False
+        self.parked = False
         self._prefetch_budget_s = 0.0   # prior pull's wire time still hideable
         self._handle = coordinator.open_stream(endpoint, client_id=client_id)
         self._lease_out: list[tuple[RecordBatch, bulk_mod.BulkHandle | None]] = []
+
+    # ----------------------------------------------------------- remaining
+    @property
+    def remaining(self) -> int | None:
+        """Batches still owed by this stream's bounded range (``None`` for an
+        unbounded drain-to-end endpoint)."""
+        if self.endpoint.max_batches is None:
+            return None
+        return max(0, self.endpoint.max_batches - self.delivered)
+
+    # ----------------------------------------------------------- split hook
+    def split(self, keep_batches: int) -> tuple[int, int]:
+        """Work-stealing split at a lease boundary: truncate this stream's
+        bounded range to ``delivered + keep_batches`` and return the tail as
+        a global ``(start_batch, num_batches)`` range for the thief to
+        re-lease via ``init_scan(start_batch=…)``. Pure client-side
+        bookkeeping — the victim's server reader simply stops being asked
+        past the truncated range."""
+        remaining = self.remaining
+        if remaining is None:
+            raise ValueError("cannot split an unbounded stream")
+        if not 0 <= keep_batches < remaining:
+            raise ValueError(
+                f"keep_batches={keep_batches} outside [0, {remaining})")
+        tail_start = (self.endpoint.start_batch + self.delivered
+                      + keep_batches)
+        tail_count = remaining - keep_batches
+        self.endpoint = dataclasses.replace(
+            self.endpoint, max_batches=self.delivered + keep_batches)
+        return tail_start, tail_count
+
+    # ----------------------------------------------------- park/unpark hooks
+    def park(self) -> None:
+        """Lease-boundary preemption: release the server lease (and the
+        admission slot it holds) and checkpoint the resume offset. The
+        stream stays logically alive — :meth:`unpark` re-opens it where it
+        stopped. Call only between leases (never with a lease in flight)."""
+        if self.drained or self.parked:
+            return
+        self.parked = True
+        self.stats.parks += 1
+        self._prefetch_budget_s = 0.0    # the pipeline is cold after a park
+        self.coordinator.close_stream(self.endpoint, self._handle.uuid,
+                                      client_id=self.client_id)
+        self._handle = None
+
+    def unpark(self) -> None:
+        """Resume a parked stream: a fresh admission-gated lease fast-
+        forwarded past everything already delivered (may raise
+        ``qos.Backpressure`` — the slot was given back at park time)."""
+        if self.drained or not self.parked:
+            return
+        self._handle = self.coordinator.reopen_stream(
+            self.endpoint, self.delivered, client_id=self.client_id)
+        self.parked = False
 
     # ------------------------------------------------------------- do_rdma
     def _do_rdma(self, num_rows: int, sizes, remote: bulk_mod.BulkHandle
@@ -209,6 +282,8 @@ class StreamPuller:
         handles back to the pool once the batch is consumed."""
         if self.drained:
             return []
+        if self.parked:
+            raise RuntimeError("stream is parked; unpark() before pulling")
         if self.endpoint.max_batches is not None:
             lease_batches = min(
                 lease_batches, self.endpoint.max_batches - self.delivered)
@@ -245,6 +320,9 @@ class StreamPuller:
     def _finish(self) -> None:
         if not self.drained:
             self.drained = True
+            if self.parked:      # lease already released at park time
+                self.parked = False
+                return
             self.coordinator.close_stream(self.endpoint, self._handle.uuid,
                                           client_id=self.client_id)
 
@@ -258,6 +336,7 @@ class MultiStreamPuller:
                  prefetch: bool = True, client_id: str = "default"):
         if schedule not in ("round_robin", "first_ready"):
             raise ValueError(f"unknown schedule {schedule!r}")
+        self.coordinator = coordinator
         self.plan = plan
         self.pool = pool
         # snapshot so stats() reports only THIS scan's pool activity even
@@ -266,6 +345,7 @@ class MultiStreamPuller:
                                if pool is not None else None)
         self.lease_batches = lease_batches
         self.schedule = schedule
+        self.steal_events: list = []   # appended by repro.sched drivers
         self.pullers: list[StreamPuller] = []
         try:
             for ep in plan.endpoints:
@@ -358,4 +438,5 @@ class MultiStreamPuller:
             query_id=self.plan.query_id, placement=self.plan.placement,
             streams=[p.stats for p in self.pullers],
             pool=(self.pool.stats.delta_since(self._pool_baseline)
-                  if self.pool is not None else None))
+                  if self.pool is not None else None),
+            steal_events=list(self.steal_events))

@@ -17,6 +17,16 @@ Three transports, one knob:
   leases through a registered buffer pool. This subsumes the backup-request
   hack — a slow or failed stream is resumed individually via
   ``init_scan(start_batch=…)`` instead of re-running the whole query.
+* ``"gateway"`` — the loader submits one logical
+  ``qos.ScanRequest`` per epoch through a ``qos.ScanGateway`` (pass
+  ``gateway=``). The scan then rides whatever adaptive scheduling the
+  gateway carries: identical concurrent queries coalesce onto a shared
+  ticket (``LoaderStats.shared_scans`` counts multicast grants that cost no
+  extra server work), a batch-class scan may be preempted at lease
+  boundaries by interactive traffic (``LoaderStats.preemptions``), and
+  stragglers are work-stolen. Resume uses the request's ``start_batch``
+  (global scan order — the gateway reassembles before the loader sees
+  batches, so per-stream offsets are unnecessary).
 
 Resumable cursors in every mode: ``state_dict()``/``load_state_dict()``
 round-trip the cursor through the checkpoint manifest. Cluster mode tracks
@@ -48,6 +58,8 @@ class LoaderStats:
     backup_requests: int = 0
     stream_resumes: int = 0
     transport_s: float = 0.0
+    shared_scans: int = 0        # gateway scans served by ticket multicast
+    preemptions: int = 0         # times a gateway scan parked mid-flight
 
 
 class ThallusLoader:
@@ -59,10 +71,14 @@ class ThallusLoader:
                  straggler_deadline_s: float = 0.5, start_batch: int = 0,
                  num_streams: int | None = None, use_pool: bool = True,
                  placement: str = "replica", admission=None,
-                 client_id: str = "loader"):
-        if not servers:
+                 client_id: str = "loader", gateway=None,
+                 klass: str = "batch"):
+        if transport == "gateway":
+            if gateway is None:
+                raise ValueError("transport='gateway' needs a gateway=")
+        elif not servers:
             raise ValueError("need at least one server")
-        if transport not in ("thallus", "rpc", "cluster"):
+        if transport not in ("thallus", "rpc", "cluster", "gateway"):
             raise ValueError(f"unknown transport {transport!r}")
         self.servers = servers
         self.sql = sql
@@ -76,6 +92,8 @@ class ThallusLoader:
         self.placement = placement
         self.admission = admission
         self.client_id = client_id
+        self.gateway = gateway
+        self.klass = klass
         self.stats = LoaderStats()
         self._offset = start_batch
         self._stream_offsets: list[int] = []
@@ -95,6 +113,8 @@ class ThallusLoader:
     def _pull_batches(self) -> Iterator[RecordBatch]:
         if self.transport == "cluster":
             yield from self._pull_cluster()
+        elif self.transport == "gateway":
+            yield from self._pull_gateway()
         else:
             yield from self._pull_single_stream()
 
@@ -121,6 +141,38 @@ class ThallusLoader:
             self.stats.batches += 1
             self._offset += 1
             yield b
+
+    def _pull_gateway(self) -> Iterator[RecordBatch]:
+        """One logical scan through the qos gateway, resumed by global
+        offset: the request's ``start_batch`` IS the loader cursor (the
+        gateway pushes it down into replica plans, or trims the reassembled
+        head for shard plans), so checkpoint state stays a single integer.
+        Surfaces the adaptive-scheduler outcomes: ``shared_scans`` when the
+        result arrived by shared-ticket multicast, ``preemptions`` when the
+        scan was parked for interactive traffic mid-flight."""
+        from ..qos import ScanRequest   # data -> qos only on this path
+        request = self.gateway.submit(ScanRequest(
+            self.client_id, self.klass, self.sql, self.dataset,
+            num_streams=self.num_streams, start_batch=self._offset))
+        if request is None:
+            return                      # shed at submit (deadline policy)
+        self.gateway.run()
+        result = self.gateway.result(request.request_id)
+        if result is None:
+            return                      # shed/failed while queued
+        self.stats.shared_scans += int(result.shared)
+        self.stats.preemptions += result.preemptions
+        self.stats.stream_resumes += result.cluster.resumes
+        self.stats.transport_s += result.service_s
+        try:
+            for batch in result.batches:
+                self._offset += 1
+                self.stats.batches += 1
+                yield batch
+        finally:
+            # the loader re-submits every epoch; leaving each epoch's fully
+            # materialized result in the gateway map would grow unbounded
+            self.gateway.results.pop(request.request_id, None)
 
     def _pull_cluster(self) -> Iterator[RecordBatch]:
         """Partitioned multi-stream pull with per-stream resume offsets.

@@ -16,6 +16,24 @@ not just the batch level). Between submit and grant sit the two QoS layers:
   request still sees every shard (nothing is silently dropped), its streams
   are just serialized onto ``quota`` modeled lanes.
 
+With a :class:`repro.sched.AdaptiveScheduler` attached, execution itself
+becomes adaptive:
+
+* **work stealing** — fan-outs run on a
+  :class:`~repro.sched.steal.StealingPuller`, so a lagging replica's
+  remaining range migrates to the fastest idle replica mid-scan;
+* **shared tickets** — identical queued requests (same
+  ``(sql, dataset, start_batch)``) coalesce onto one fan-out; the first to
+  reach the head of the queue executes and publishes, every later
+  subscriber is served by multicast (copy-on-read) with its own per-class
+  accounting but zero additional server-side service;
+* **preemption** — batch-class requests execute in parkable lease rounds
+  (:class:`~repro.sched.preempt.PreemptibleScan`); the moment an
+  interactive request has *arrived* on the modeled clock, the batch scan
+  parks at its lease boundary (leases and admission slots released), the
+  remainder re-enters the weighted-fair queue at its residual cost, and the
+  scan resumes where it stopped when the virtual clock readmits it.
+
 Time is modeled: the gateway runs a deterministic clock that advances by
 each request's modeled service time, so grant latency / shedding / fairness
 comparisons reproduce exactly under any machine load. The coordinator handed
@@ -28,10 +46,11 @@ from __future__ import annotations
 import dataclasses
 
 from ..cluster.mempool import BufferPool
-from ..cluster.plan import ScanPlan
+from ..cluster.plan import Endpoint, ScanPlan
 from ..cluster.coordinator import ClusterCoordinator
 from ..cluster.streams import ClusterStats, MultiStreamPuller
 from ..core.recordbatch import RecordBatch
+from ..sched import AdaptiveScheduler, PreemptibleScan, Ticket
 from .admission import AdmissionController, Backpressure
 from .metrics import QosStats
 from .queue import ClientClass, FifoQueue, WeightedFairQueue
@@ -50,6 +69,7 @@ class ScanRequest:
     deadline_s: float | None = None  # shed if modeled wait exceeds this
     arrival_s: float = 0.0          # modeled arrival time
     num_streams: int | None = None  # fan-out hint (replica placement)
+    start_batch: int = 0            # resume offset in global scan order
 
 
 @dataclasses.dataclass
@@ -59,21 +79,28 @@ class ScanResult:
     cluster: ClusterStats
     grant_latency_s: float          # modeled submit -> grant
     service_s: float                # modeled execution (quota-capped makespan)
+    shared: bool = False            # served by shared-ticket multicast
+    preemptions: int = 0            # times this scan was parked mid-flight
 
 
-def reassemble(plan: ScanPlan, per_stream: list[list[RecordBatch]]
+def reassemble(plan: ScanPlan, per_stream: list[list[RecordBatch]],
+               endpoints: tuple[Endpoint, ...] | None = None
                ) -> list[RecordBatch]:
     """Merge per-stream deliveries back into global scan order.
 
     * ``replica`` plans slice the batch range contiguously — concatenate
-      streams by ``start_batch``.
+      streams by ``start_batch``. Work stealing splits ranges but keeps
+      them contiguous and disjoint, so the same sort covers stolen tails;
+      pass the *actual* endpoints driven (``puller.endpoints`` may have
+      grown past ``plan.endpoints``).
     * ``shard`` plans come from :meth:`ClusterCoordinator.place_shards`,
       which deals ``batches[i::n]`` to the i-th sorted server, so stream
       *i*'s j-th batch is global batch ``j*n + i`` — re-interleave.
     """
+    endpoints = plan.endpoints if endpoints is None else endpoints
     if plan.placement == "replica":
-        order = sorted(range(len(plan.endpoints)),
-                       key=lambda i: plan.endpoints[i].start_batch)
+        order = sorted(range(len(endpoints)),
+                       key=lambda i: endpoints[i].start_batch)
         return [b for i in order for b in per_stream[i]]
     out: list[RecordBatch] = []
     j = 0
@@ -108,6 +135,30 @@ def _makespan(clock_s: list[float], parallelism: int | None) -> float:
     return max(lanes)
 
 
+@dataclasses.dataclass
+class _ParkedScan:
+    """A preempted request's continuation, re-queued at residual cost."""
+
+    request: ScanRequest
+    scan: PreemptibleScan
+    plan: ScanPlan
+    grant_latency_s: float          # first grant — preserved across parks
+    trim: int                       # leading batches to drop (start_batch)
+
+    @property
+    def klass(self) -> str:
+        return self.request.klass
+
+    @property
+    def arrival_s(self) -> float:
+        return self.request.arrival_s
+
+    def residual_cost(self) -> float:
+        total = self.scan.total_batches
+        frac = (self.scan.delivered / total) if total else 0.5
+        return max(self.request.cost_hint * (1.0 - frac), 1e-12)
+
+
 class ScanGateway:
     """Admission-controlled front door for every scan against the cluster."""
 
@@ -116,12 +167,14 @@ class ScanGateway:
                  admission: AdmissionController | None = None,
                  pool: BufferPool | None = None, fair: bool = True,
                  lease_batches: int = 1, prefetch: bool = True,
-                 est_service_s_per_cost: float = 1e-4):
+                 est_service_s_per_cost: float = 1e-4,
+                 scheduler: AdaptiveScheduler | None = None):
         self.coordinator = coordinator
         self.admission = admission
         self.pool = pool
         self.lease_batches = lease_batches
         self.prefetch = prefetch
+        self.scheduler = scheduler
         self.queue = WeightedFairQueue(classes) if fair else FifoQueue()
         self.stats = QosStats()
         self.results: dict[int, ScanResult] = {}
@@ -129,6 +182,42 @@ class ScanGateway:
         self._next_id = 0
         # calibration: WFQ cost units -> modeled seconds, refined as we serve
         self._service_s_per_cost = est_service_s_per_cost
+
+    # ------------------------------------------------------------- modeling
+    def _quota(self) -> int | None:
+        return (self.admission.config.max_streams_per_client
+                if self.admission is not None else None)
+
+    def _service_time(self, streams) -> float:
+        """Modeled service of a fan-out: the critical path of absolute
+        stream finish times, floored by the quota-lane packing of stream
+        *durations*. A stolen stream's ``start_s`` epoch is waiting, not
+        work — it bounds the finish time but must not be packed into a
+        lane as if the lane were busy."""
+        finish = max((s.start_s + s.clock_s for s in streams), default=0.0)
+        return max(finish,
+                   _makespan([s.clock_s for s in streams], self._quota()))
+
+    # ---------------------------------------------------------- sched hooks
+    @property
+    def _tickets(self):
+        return self.scheduler.tickets if self.scheduler is not None else None
+
+    @property
+    def _preempt(self):
+        return self.scheduler.preempt if self.scheduler is not None else None
+
+    def _ticket_key(self, request: ScanRequest):
+        return (request.sql, request.dataset, request.start_batch)
+
+    def _make_puller(self, plan: ScanPlan,
+                     client_id: str) -> MultiStreamPuller:
+        kwargs = dict(pool=self.pool, lease_batches=self.lease_batches,
+                      prefetch=self.prefetch, client_id=client_id)
+        if self.scheduler is not None:
+            return self.scheduler.make_puller(self.coordinator, plan,
+                                              **kwargs)
+        return MultiStreamPuller(self.coordinator, plan, **kwargs)
 
     # --------------------------------------------------------------- submit
     def submit(self, request: ScanRequest) -> ScanRequest | None:
@@ -150,6 +239,9 @@ class ScanGateway:
                 cstats.shed += 1
                 return None
         self.queue.push(request, request.klass, request.cost_hint)
+        if self._tickets is not None:
+            self._tickets.subscribe(self._ticket_key(request),
+                                    request.request_id)
         self.stats.queue_depth_max = max(self.stats.queue_depth_max,
                                          len(self.queue))
         return request
@@ -158,25 +250,61 @@ class ScanGateway:
     def run(self) -> list[ScanResult]:
         """Drain the queue in fair order; returns results in grant order."""
         granted: list[ScanResult] = []
+        tickets, preempt = self._tickets, self._preempt
+        if tickets is not None:
+            tickets.begin_drain()
         while len(self.queue):
-            request = self.queue.pop()
+            item = (self.queue.pop(self.clock_s) if preempt is not None
+                    else self.queue.pop())
+            if isinstance(item, _ParkedScan):
+                result = self._run_preemptible(item)
+                if result is not None:
+                    granted.append(result)
+                    self.results[item.request.request_id] = result
+                continue
+            request = item
+            if preempt is not None and request.arrival_s > self.clock_s:
+                # nothing else had arrived: the gateway idles to the next
+                # arrival. Only the arrival-aware pop path models time this
+                # way — the plain pop ignores arrivals entirely, and jumping
+                # its clock would shed co-queued requests spuriously.
+                self.clock_s = request.arrival_s
             cstats = self.stats.klass(request.klass)
             waited = self.clock_s - request.arrival_s
             if request.deadline_s is not None and waited > request.deadline_s:
                 cstats.shed += 1          # deadline expired while queued
+                if tickets is not None:   # a subscriber cancel
+                    tickets.cancel(self._ticket_key(request),
+                                   request.request_id)
                 continue
+            if tickets is not None:
+                ticket = tickets.redeem(self._ticket_key(request),
+                                        request.request_id)
+                if ticket is not None:    # coalesced: multicast, no fan-out
+                    result = self._multicast(request, ticket)
+                    granted.append(result)
+                    self.results[request.request_id] = result
+                    continue
             try:
                 result = self._execute(request)
             except Backpressure:
                 # a coordinator-level admission denial (a gateway-bypassing
                 # config); treat as a shed rather than crashing the drain
                 cstats.shed += 1
+                if tickets is not None:
+                    tickets.cancel(self._ticket_key(request),
+                                   request.request_id)
                 continue
             except Exception:
                 # one malformed request (bad SQL, unknown dataset, an
                 # impossible num_streams hint) must not abort the drain and
                 # take every other client's queued work with it
                 cstats.failed += 1
+                if tickets is not None:
+                    tickets.cancel(self._ticket_key(request),
+                                   request.request_id)
+                continue
+            if result is None:            # parked mid-scan; re-queued
                 continue
             granted.append(result)
             self.results[request.request_id] = result
@@ -189,9 +317,28 @@ class ScanGateway:
         return self.results.get(request_id)
 
     # -------------------------------------------------------------- execute
-    def _execute(self, request: ScanRequest) -> ScanResult:
-        quota = (self.admission.config.max_streams_per_client
-                 if self.admission is not None else None)
+    def _apply_start(self, plan: ScanPlan,
+                     start_batch: int) -> tuple[ScanPlan, int]:
+        """Push a global resume offset down into the plan when the layout
+        allows it. Replica plans slice contiguous ranges, so the offset
+        intersects exactly (no wasted transport); shard plans interleave, so
+        the offset is applied by trimming the reassembled head instead."""
+        if start_batch <= 0 or plan.placement != "replica":
+            return plan, max(0, start_batch)
+        endpoints = []
+        for ep in plan.endpoints:
+            if ep.max_batches is None:
+                endpoints.append(ep)
+                continue
+            end = ep.start_batch + ep.max_batches
+            lo = max(ep.start_batch, start_batch)
+            if lo < end:
+                endpoints.append(dataclasses.replace(
+                    ep, start_batch=lo, max_batches=end - lo))
+        return dataclasses.replace(plan, endpoints=tuple(endpoints)), 0
+
+    def _plan(self, request: ScanRequest) -> tuple[ScanPlan, int]:
+        quota = self._quota()
         num_streams = request.num_streams
         if (quota is not None and
                 self.coordinator.placement_mode(request.dataset) == "replica"):
@@ -200,24 +347,113 @@ class ScanGateway:
             num_streams = min(num_streams or hosts, quota)
         plan = self.coordinator.plan(request.sql, request.dataset,
                                      num_streams=num_streams)
+        return self._apply_start(plan, request.start_batch)
+
+    def _execute(self, request: ScanRequest) -> ScanResult | None:
+        plan, trim = self._plan(request)
         if self.admission is not None:
             # one lease token per stream the fan-out opens
             self.clock_s += self.admission.lease_wait_s(
                 self.clock_s, len(plan.endpoints))
         grant_latency = self.clock_s - request.arrival_s
-        puller = MultiStreamPuller(
-            self.coordinator, plan, pool=self.pool,
-            lease_batches=self.lease_batches, prefetch=self.prefetch,
-            client_id=request.client_id)
+        puller = self._make_puller(plan, request.client_id)
+        preempt = self._preempt
+        if (preempt is not None and preempt.applies_to(request.klass)
+                and self._outweighed(request.klass)):
+            scan = PreemptibleScan(puller, copy_batch=_copy_batch)
+            return self._run_preemptible(
+                _ParkedScan(request, scan, plan, grant_latency, trim))
         per_stream: list[list[RecordBatch]] = [[] for _ in plan.endpoints]
 
         def sink(idx: int, batch: RecordBatch) -> None:
+            while len(per_stream) <= idx:   # stolen streams grow the table
+                per_stream.append([])
             per_stream[idx].append(
                 _copy_batch(batch) if self.pool is not None else batch)
 
         cluster = puller.run(sink)
-        service = _makespan([s.clock_s for s in cluster.streams], quota)
+        service = self._service_time(cluster.streams)
         self.clock_s += service
+        endpoints = tuple(p.endpoint for p in puller.pullers)
+        batches = reassemble(plan, per_stream, endpoints)[trim:]
+        return self._finalize(request, batches, cluster, grant_latency,
+                              service)
+
+    def _outweighed(self, klass: str) -> bool:
+        """Someone configured above this class's weight might preempt it."""
+        w = self.queue.weight(klass)
+        return any(c.weight > w for c in self.queue.classes.values())
+
+    # --------------------------------------------------------- sched paths
+    def _run_preemptible(self, parked: _ParkedScan) -> ScanResult | None:
+        """Drive (or resume) a parkable scan; returns ``None`` when it was
+        parked again (its continuation is back in the queue) or shed."""
+        request, scan = parked.request, parked.scan
+        cstats = self.stats.klass(request.klass)
+        preempt = self._preempt
+        if scan.parked:
+            try:
+                scan.resume()
+            except Backpressure:
+                # the budget moved against us while parked; the scan cannot
+                # hold half a result forever — shed it and free everything
+                cstats.shed += 1
+                scan.abandon()
+                if self._tickets is not None:   # a subscriber cancel
+                    self._tickets.cancel(self._ticket_key(request),
+                                         request.request_id)
+                return None
+        rounds = 0
+        while not scan.done:
+            self.clock_s += scan.run_round()
+            scan.rebalance()             # stealing composes with preemption
+            rounds += 1
+            if (not scan.done
+                    and rounds >= preempt.min_rounds_before_park
+                    and self.queue.has_preemptor(request.klass,
+                                                 self.clock_s)):
+                scan.park()
+                cstats.preemptions += 1
+                self.queue.push(parked, request.klass,
+                                parked.residual_cost())
+                self.stats.queue_depth_max = max(self.stats.queue_depth_max,
+                                                 len(self.queue))
+                return None
+        cluster = scan.stats()
+        # the rounds advanced the clock by unconstrained critical-path
+        # deltas (scan.elapsed_s telescopes to the critical path); a stream
+        # quota serializes lanes exactly like the one-shot path, so charge
+        # the serialization remainder now
+        service = max(scan.elapsed_s, self._service_time(cluster.streams))
+        self.clock_s += service - scan.elapsed_s
+        endpoints = tuple(p.endpoint for p in scan.puller.pullers)
+        batches = reassemble(parked.plan, scan.per_stream,
+                             endpoints)[parked.trim:]
+        return self._finalize(request, batches, cluster,
+                              parked.grant_latency_s, service,
+                              preemptions=scan.park_count)
+
+    def _multicast(self, request: ScanRequest, ticket: Ticket) -> ScanResult:
+        """Serve a coalesced subscriber from the published ticket: each
+        subscriber reads its own deep copy (copy-on-read), is attributed
+        granted batches/bytes in its own class, and consumes **zero**
+        additional server-side service — the multicast copy is client-side,
+        off the modeled critical path."""
+        grant_latency = self.clock_s - request.arrival_s
+        batches = [_copy_batch(b) for b in ticket.batches]
+        cstats = self.stats.klass(request.klass)
+        cstats.granted += 1
+        cstats.ticket_hits += 1
+        cstats.grant_latency_s.append(grant_latency)
+        cstats.bytes += getattr(ticket.cluster, "bytes", 0)
+        cstats.batches += len(batches)
+        return ScanResult(request, batches, ticket.cluster, grant_latency,
+                          0.0, shared=True)
+
+    # ------------------------------------------------------------- finalize
+    def _finalize(self, request: ScanRequest, batches: list[RecordBatch],
+                  cluster: ClusterStats, grant_latency: float,
+                  service: float, preemptions: int = 0) -> ScanResult:
         cstats = self.stats.klass(request.klass)
         cstats.granted += 1
         cstats.grant_latency_s.append(grant_latency)
@@ -229,5 +465,8 @@ class ScanGateway:
         observed = service / max(request.cost_hint, 1e-12)
         self._service_s_per_cost = (0.5 * self._service_s_per_cost
                                     + 0.5 * observed)
-        return ScanResult(request, reassemble(plan, per_stream), cluster,
-                          grant_latency, service)
+        if self._tickets is not None:
+            self._tickets.publish(self._ticket_key(request),
+                                  request.request_id, batches, cluster)
+        return ScanResult(request, batches, cluster, grant_latency, service,
+                          preemptions=preemptions)

@@ -41,6 +41,8 @@ class ClassStats:
     service_s: float = 0.0         # modeled service time consumed
     bytes: int = 0                 # from the per-request ClusterStats
     batches: int = 0
+    ticket_hits: int = 0           # served by shared-ticket multicast
+    preemptions: int = 0           # parked at a lease boundary (sched)
 
     @property
     def p50_grant_latency_s(self) -> float:
@@ -92,12 +94,31 @@ class QosStats:
     def bytes(self) -> int:
         return sum(c.bytes for c in self.classes.values())
 
+    @property
+    def ticket_hits(self) -> int:
+        """Requests served by shared-ticket multicast (no fan-out ran)."""
+        return sum(c.ticket_hits for c in self.classes.values())
+
+    @property
+    def preemptions(self) -> int:
+        """Lease-boundary parks across every class."""
+        return sum(c.preemptions for c in self.classes.values())
+
+    @property
+    def steals(self) -> int:
+        """Work-stealing range migrations across every granted fan-out."""
+        return sum(c.steals for c in self.cluster)
+
     def summary(self) -> str:
         """One benchmark-row string: the acceptance-criteria numbers."""
         parts = [f"depth_max={self.queue_depth_max}", f"shed={self.shed}",
                  f"failed={self.failed}",
                  f"throttle_us={self.throttle_wait_s * 1e6:.1f}",
                  f"makespan_us={self.makespan_s * 1e6:.1f}"]
+        if self.steals or self.ticket_hits or self.preemptions:
+            parts.append(f"steals={self.steals} "
+                         f"ticket_hits={self.ticket_hits} "
+                         f"preempt={self.preemptions}")
         for name in sorted(self.classes):
             c = self.classes[name]
             parts.append(

@@ -76,10 +76,42 @@ class WeightedFairQueue:
         return tag
 
     # ------------------------------------------------------------ dequeuing
-    def pop(self):
-        tag, _, _, item = heapq.heappop(self._heap)
-        self._vtime = max(self._vtime, tag)
-        return item
+    def pop(self, now_s: float | None = None):
+        """Pop the smallest finish tag. With ``now_s`` (the preemption-aware
+        gateway's modeled clock), only items that have *arrived*
+        (``item.arrival_s <= now_s``) compete; when nothing has arrived yet
+        the global minimum is returned and the caller advances its clock to
+        that item's arrival. Without ``now_s`` arrival times are ignored
+        (the pre-sched behavior)."""
+        if now_s is None or not self._heap:
+            tag, _, _, item = heapq.heappop(self._heap)
+            self._vtime = max(self._vtime, tag)
+            return item
+        arrived = [e for e in self._heap
+                   if getattr(e[3], "arrival_s", 0.0) <= now_s]
+        if arrived:
+            entry = min(arrived)
+        else:
+            # idle gateway: serve the EARLIEST arrival next (jumping to a
+            # later-arriving item's tag would idle past — and spuriously
+            # deadline-shed — requests that arrive in between)
+            entry = min(self._heap,
+                        key=lambda e: (getattr(e[3], "arrival_s", 0.0),
+                                       e[0], e[1]))
+        self._heap.remove(entry)
+        heapq.heapify(self._heap)
+        self._vtime = max(self._vtime, entry[0])
+        return entry[3]
+
+    def has_preemptor(self, klass: str, now_s: float) -> bool:
+        """True when a strictly higher-weight request has arrived by
+        ``now_s`` — the gateway's signal to park a running ``klass`` scan
+        at its next lease boundary."""
+        w = self.weight(klass)
+        return any(
+            self.weight(getattr(item, "klass", "?")) > w
+            and getattr(item, "arrival_s", 0.0) <= now_s
+            for _, _, _, item in self._heap)
 
     def __len__(self) -> int:
         return len(self._heap)

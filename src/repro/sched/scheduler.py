@@ -1,0 +1,42 @@
+"""The adaptive scheduler: one object bundling the three mechanisms.
+
+``AdaptiveScheduler`` is what callers hand to the qos
+:class:`~repro.qos.ScanGateway` (or use directly against a coordinator):
+turn on any subset of work stealing (:mod:`.steal`), shared tickets
+(:mod:`.share`) and lease-boundary preemption (:mod:`.preempt`) by setting
+the corresponding config. ``AdaptiveScheduler.default()`` enables all three
+with conservative knobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..cluster.plan import ScanPlan
+from ..cluster.streams import MultiStreamPuller
+from .preempt import PreemptConfig
+from .share import TicketTable
+from .steal import StealConfig, StealingPuller
+
+
+@dataclasses.dataclass
+class AdaptiveScheduler:
+    """Adaptive execution policy between the gateway and the dataplane."""
+
+    steal: StealConfig | None = None
+    tickets: TicketTable | None = None
+    preempt: PreemptConfig | None = None
+
+    @classmethod
+    def default(cls) -> "AdaptiveScheduler":
+        """All three mechanisms on, conservative thresholds."""
+        return cls(steal=StealConfig(), tickets=TicketTable(),
+                   preempt=PreemptConfig())
+
+    def make_puller(self, coordinator, plan: ScanPlan,
+                    **kwargs) -> MultiStreamPuller:
+        """The dataplane driver for one fan-out: a stealing puller when
+        stealing is enabled, the plain static one otherwise."""
+        if self.steal is not None:
+            return StealingPuller(coordinator, plan, steal=self.steal,
+                                  **kwargs)
+        return MultiStreamPuller(coordinator, plan, **kwargs)

@@ -1,0 +1,247 @@
+"""Work stealing: move a straggler's remaining batch range mid-scan.
+
+The cluster dataplane executes a :class:`~repro.cluster.plan.ScanPlan`
+statically — once the planner has dealt batch ranges to replicas, a lagging
+endpoint drags the whole critical path while faster replicas sit idle after
+draining their slices. On fast fabrics that scheduling gap, not the wire, is
+the bottleneck (Rödiger et al., arXiv:1502.07169). This module closes it:
+
+* :class:`ProgressTracker` watches every stream's **modeled clock** during
+  the drive loop and projects a finish time (ETA) from its observed
+  per-batch rate and remaining bounded range;
+* when a stream's ETA exceeds the fleet median by ``StealConfig.factor``,
+  :class:`StealingPuller` splits the victim's remaining
+  ``(start_batch, end_batch)`` range at the current lease boundary
+  (:meth:`StreamPuller.split`) and re-leases the tail to the **fastest idle
+  replica** via a fresh ``init_scan(start_batch=…)`` lease;
+* every move is recorded as a :class:`StealEvent` on the scan's
+  :class:`~repro.cluster.streams.ClusterStats`.
+
+Stealing requires ``replica`` placement — only a server holding a full copy
+can serve an arbitrary batch range. Shard plans pass through untouched.
+
+Modeled-time bookkeeping: a stolen stream does not start at t=0. Its
+``StreamStats.start_s`` is seeded with the steal epoch — the moment its
+thief server went idle (it cannot start earlier) — so
+``ClusterStats.modeled_critical_path_s`` stays an honest makespan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Iterator
+
+from ..cluster.plan import Endpoint
+from ..cluster.streams import MultiStreamPuller, StreamPuller
+
+
+@dataclasses.dataclass(frozen=True)
+class StealEvent:
+    """One range migration, for the audit trail in ``ClusterStats``."""
+
+    victim: str              # server_id the range was taken from
+    thief: str               # server_id it was re-leased to
+    start_batch: int         # first stolen global batch index
+    num_batches: int
+    epoch_s: float           # modeled time the stolen stream started
+    victim_eta_s: float      # victim's projected finish before the steal
+    median_eta_s: float      # fleet median ETA at the decision
+
+
+@dataclasses.dataclass(frozen=True)
+class StealConfig:
+    """When and how aggressively to move work.
+
+    ``factor`` is the straggler threshold: steal when a stream's projected
+    finish exceeds the fleet median projection by this multiple. ``2.0`` is
+    conservative (a replica must be twice as late as the median); lower it
+    toward 1 for eager rebalancing, at the cost of more split/lease churn.
+    """
+
+    factor: float = 2.0
+    min_batches: int = 2       # never move a tail smaller than this
+    max_steals: int = 16       # per scan — runaway-split guard
+
+    def __post_init__(self) -> None:
+        if self.factor < 1.0:
+            raise ValueError("steal factor must be >= 1.0")
+        if self.min_batches < 1:
+            raise ValueError("min_batches must be >= 1")
+
+
+class ProgressTracker:
+    """Projects per-stream finish times from modeled clocks.
+
+    All arithmetic is on ``StreamStats.modeled_wire_s`` (a pure function of
+    bytes/segments/ops), so straggler detection is deterministic under any
+    machine load — the same trick ``modeled_critical_path_s`` uses.
+    """
+
+    def __init__(self, config: StealConfig | None = None):
+        self.config = config or StealConfig()
+
+    @staticmethod
+    def finish_s(puller: StreamPuller) -> float:
+        """Modeled time at which this stream is (or was) done pulling."""
+        return puller.stats.start_s + puller.stats.modeled_wire_s
+
+    def rate_s(self, puller: StreamPuller) -> float | None:
+        """Observed modeled seconds per batch; ``None`` before first batch."""
+        s = puller.stats
+        return s.modeled_wire_s / s.batches if s.batches > 0 else None
+
+    def eta_s(self, puller: StreamPuller) -> float | None:
+        """Projected finish: progress so far plus remaining batches at the
+        observed rate. ``None`` when unmeasurable (no batches yet) or
+        unbounded (no known remaining range)."""
+        if puller.drained:
+            return self.finish_s(puller)
+        rate, remaining = self.rate_s(puller), puller.remaining
+        if rate is None or remaining is None:
+            return None
+        return self.finish_s(puller) + remaining * rate
+
+    def find_straggler(self, pullers: list[StreamPuller]
+                       ) -> tuple[int, float, float] | None:
+        """The stream to steal from, or ``None`` if the fleet is balanced.
+
+        Returns ``(victim_index, victim_eta, median_eta)``. A victim must be
+        live, bounded, measurable, owe at least ``min_batches``, and project
+        past ``factor ×`` the fleet median ETA.
+        """
+        etas = [self.eta_s(p) for p in pullers]
+        known = sorted(e for e in etas if e is not None)
+        if len(known) < 2:
+            return None
+        median = known[(len(known) - 1) // 2]
+        victim, victim_eta = None, 0.0
+        for idx, (p, eta) in enumerate(zip(pullers, etas)):
+            if (eta is None or p.drained or p.parked
+                    or (p.remaining or 0) < self.config.min_batches):
+                continue
+            if eta > victim_eta:
+                victim, victim_eta = idx, eta
+        if victim is None or victim_eta <= self.config.factor * max(median,
+                                                                    1e-30):
+            return None
+        return victim, victim_eta, median
+
+
+class StealingPuller(MultiStreamPuller):
+    """A first-ready multi-stream drive that rebalances between leases.
+
+    Drop-in for :class:`~repro.cluster.streams.MultiStreamPuller`: same
+    batches, same streaming contract, plus work stealing. Consumers that
+    index per-stream output by stream id must size for growth — stolen
+    streams append pullers past the original plan width (the qos gateway
+    reassembles by endpoint range, so it is unaffected).
+    """
+
+    def __init__(self, coordinator, plan, steal: StealConfig | None = None,
+                 **kwargs):
+        kwargs.setdefault("schedule", "first_ready")
+        super().__init__(coordinator, plan, **kwargs)
+        self.tracker = ProgressTracker(steal)
+        self._stealable = (plan.placement == "replica")
+
+    @staticmethod
+    def _modeled_clock(puller: StreamPuller) -> float:
+        """Stream progress on the *modeled* timeline only. The drive loop
+        must sequence leases (and therefore steal decisions) by modeled
+        time — the measured components of ``clock_s`` (host memcpy wall
+        time) are similar across streams and would mask the very lag the
+        tracker is looking for."""
+        s = puller.stats
+        return (s.start_s + s.modeled_wire_s + s.control_rpc_s
+                + s.throttle_wait_s)
+
+    # ----------------------------------------------------------- drive loop
+    def _drive(self):
+        try:
+            heap = [(0.0, idx) for idx in range(len(self.pullers))]
+            heapq.heapify(heap)
+            while heap:
+                _, idx = heapq.heappop(heap)
+                yield from self._lease(idx)
+                puller = self.pullers[idx]
+                if not puller.drained:
+                    heapq.heappush(heap, (self._modeled_clock(puller), idx))
+                for new_idx in self._maybe_steal():
+                    thief = self.pullers[new_idx]
+                    heapq.heappush(
+                        heap, (self._modeled_clock(thief), new_idx))
+        finally:
+            self._abandon()
+
+    # ------------------------------------------------------------- stealing
+    def _idle_servers(self) -> dict[str, float]:
+        """server_id → idle-since epoch for replicas with no live stream of
+        this scan. A server never leased by this scan is idle from t=0."""
+        hosts = self.coordinator.hosts(self.plan.dataset)
+        busy = {p.endpoint.server_id for p in self.pullers if not p.drained}
+        idle: dict[str, float] = {}
+        for sid in hosts:
+            if sid in busy:
+                continue
+            drained = [p for p in self.pullers
+                       if p.endpoint.server_id == sid and p.drained]
+            idle[sid] = max((self.tracker.finish_s(p) for p in drained),
+                            default=0.0)
+        return idle
+
+    def _server_rate(self, server_id: str) -> float | None:
+        """Observed per-batch modeled rate of a server's drained streams."""
+        rates = [self.tracker.rate_s(p) for p in self.pullers
+                 if p.endpoint.server_id == server_id
+                 and p.stats.batches > 0]
+        rates = [r for r in rates if r is not None]
+        return min(rates) if rates else None
+
+    def _maybe_steal(self) -> Iterator[int]:
+        """Run one straggler check; yields indices of new (thief) pullers."""
+        if (not self._stealable
+                or len(self.steal_events) >= self.tracker.config.max_steals):
+            return
+        found = self.tracker.find_straggler(self.pullers)
+        if found is None:
+            return
+        victim_idx, victim_eta, median_eta = found
+        victim = self.pullers[victim_idx]
+        idle = self._idle_servers()
+        if not idle:
+            return                       # nobody free to take the tail
+        # fastest idle replica: best observed rate, unmeasured servers last
+        rate_v = self.tracker.rate_s(victim)
+        thief_sid = min(
+            idle, key=lambda sid: (self._server_rate(sid) is None,
+                                   self._server_rate(sid) or 0.0, sid))
+        rate_t = self._server_rate(thief_sid) or rate_v
+        remaining = victim.remaining
+        # split so victim and thief project to finish together:
+        # keep × rate_v ≈ (remaining − keep) × rate_t — but never move a
+        # tail smaller than min_batches (the churn floor)
+        keep = int(remaining * rate_t / max(rate_v + rate_t, 1e-30))
+        keep = min(max(keep, 0), remaining - self.tracker.config.min_batches)
+        epoch = max(idle[thief_sid],
+                    self.tracker.finish_s(victim))   # detection point
+        endpoint = Endpoint(thief_sid, victim.endpoint.sql,
+                            victim.endpoint.dataset,
+                            start_batch=(victim.endpoint.start_batch
+                                         + victim.delivered + keep),
+                            max_batches=remaining - keep)
+        try:
+            thief = StreamPuller(self.coordinator, endpoint, pool=self.pool,
+                                 max_resumes=victim.max_resumes,
+                                 prefetch=victim.prefetch,
+                                 client_id=victim.client_id)
+        except Exception:
+            return                       # admission denied the extra lease
+        thief.stats.start_s = epoch
+        victim.split(keep)               # truncate only once the lease holds
+        self.steal_events.append(StealEvent(
+            victim=victim.endpoint.server_id, thief=thief_sid,
+            start_batch=endpoint.start_batch,
+            num_batches=endpoint.max_batches,
+            epoch_s=epoch, victim_eta_s=victim_eta, median_eta_s=median_eta))
+        self.pullers.append(thief)
+        yield len(self.pullers) - 1

@@ -66,17 +66,41 @@ class Batcher:
     def submit_scan(self, gateway, sql: str, dataset: str, *,
                     client_id: str = "serving", klass: str = "interactive",
                     cost_hint: float = 1.0, deadline_s: float | None = None,
-                    num_streams: int | None = None):
+                    num_streams: int | None = None, start_batch: int = 0,
+                    arrival_s: float = 0.0):
         """Submit the prompt-fetch scan as one logical gateway request.
         Returns the id-assigned :class:`~repro.qos.ScanRequest`, or ``None``
         when the gateway shed it at submit (deadline would be blown).
         Run the gateway, then feed ``gateway.result(req.request_id)`` to
-        :meth:`ingest_batches`."""
+        :meth:`ingest_batches` (or use :meth:`ingest_scan`).
+
+        Under a gateway with a ``repro.sched`` scheduler attached, serving
+        traffic gets the adaptive behaviors for free: replicas submitting
+        the same ``(sql, dataset, start_batch)`` prompt fetch coalesce onto
+        one shared-ticket fan-out, and — being interactive-class by
+        default — an arriving prompt fetch preempts heavy batch scans at
+        their next lease boundary instead of waiting behind them."""
         from ..qos import ScanRequest   # serving -> qos only on this path
         return gateway.submit(ScanRequest(
             client_id=client_id, klass=klass, sql=sql, dataset=dataset,
             cost_hint=cost_hint, deadline_s=deadline_s,
-            num_streams=num_streams))
+            num_streams=num_streams, start_batch=start_batch,
+            arrival_s=arrival_s))
+
+    def ingest_scan(self, gateway, request, seq_len: int, *,
+                    max_new_tokens: int = 16, eos_id: int | None = None,
+                    start_id: int = 0) -> tuple[int, bool]:
+        """Fetch a completed :meth:`submit_scan` result and enqueue its
+        sequences. Returns ``(num_requests, shared)`` — ``shared`` is True
+        when the result arrived by shared-ticket multicast (another
+        subscriber's fan-out did the server-side work)."""
+        result = gateway.result(request.request_id)
+        if result is None:              # shed or failed while queued
+            return 0, False
+        n = self.ingest_batches(result.batches, seq_len,
+                                max_new_tokens=max_new_tokens,
+                                eos_id=eos_id, start_id=start_id)
+        return n, result.shared
 
     def ingest_batches(self, batches, seq_len: int, *,
                        max_new_tokens: int = 16, eos_id: int | None = None,

@@ -114,6 +114,29 @@ def qos_table(qos) -> str:
     return "\n".join(rows)
 
 
+def sched_table(qos) -> str:
+    """Per-class markdown table for the adaptive-scheduler counters a
+    ``repro.qos.QosStats`` carries (steals / shared-ticket hits /
+    preemptions), rendered alongside :func:`pool_table` / :func:`qos_table`.
+    Duck-typed like its siblings so this module stays dependency-free."""
+    rows = ["| class | granted | ticket hits | preemptions | "
+            "p50 grant ms | service ms |",
+            "|---|---|---|---|---|---|"]
+    for name in sorted(qos.classes):
+        c = qos.classes[name]
+        rows.append(
+            f"| {name} | {c.granted}/{c.submitted} | {c.ticket_hits} | "
+            f"{c.preemptions} | {c.p50_grant_latency_s * 1e3:.3f} | "
+            f"{c.service_s * 1e3:.3f} |")
+    hit_rate = qos.ticket_hits / qos.granted if qos.granted else 0.0
+    rows.append(
+        f"| *sched* | steals={qos.steals} | "
+        f"hit_rate={hit_rate:.2f} | preempt={qos.preemptions} | "
+        f"fanouts={len(qos.cluster)} | "
+        f"makespan={qos.makespan_s * 1e3:.3f} |")
+    return "\n".join(rows)
+
+
 def summary_stats(arts: list[dict]) -> dict:
     ok = sum(1 for a in arts if a["status"] == "ok")
     skip = sum(1 for a in arts if a["status"] == "skipped")

@@ -88,6 +88,61 @@ def test_validity_roundtrip(n, seed):
     assert (unpack_validity(pack_validity(mask), n) == mask).all()
 
 
+@settings(max_examples=10, deadline=None)
+@given(num_servers=st.integers(2, 4),
+       placement=st.sampled_from(["shard", "replica"]),
+       num_subscribers=st.integers(2, 4),
+       slow_server=st.integers(0, 3),
+       slowdown=st.floats(1.0, 8.0),
+       steal_factor=st.floats(1.1, 3.0),
+       batch_rows=st.sampled_from([256, 512, 1024]))
+def test_multicast_subscribers_byte_identical(num_servers, placement,
+                                              num_subscribers, slow_server,
+                                              slowdown, steal_factor,
+                                              batch_rows):
+    """repro.sched invariant: however the scan is split (shard vs replica,
+    any batch granularity), however lopsided the fleet, and wherever work
+    stealing decides to cut (the slowdown and steal factor move the steal
+    point), the shared-ticket multicast hands every subscriber output
+    byte-identical to a solo scan."""
+    from repro.core import FabricConfig, ThallusServer
+    from repro.core.protocol import ThallusClient
+    from repro.cluster import ClusterCoordinator
+    from repro.qos import ScanGateway, ScanRequest
+    from repro.sched import AdaptiveScheduler, StealConfig, TicketTable
+
+    table = make_numeric_table("t", 4096, 2, batch_rows=batch_rows)
+    sql = "SELECT c0, c1 FROM t"
+    coord = ClusterCoordinator()
+    for i in range(num_servers):
+        cfg = FabricConfig()
+        if i == slow_server % num_servers:
+            cfg = FabricConfig(rpc_bw=cfg.rpc_bw / slowdown,
+                               rdma_bw=cfg.rdma_bw / slowdown)
+        coord.add_server(f"s{i}", ThallusServer(Engine(), Fabric(cfg)))
+    if placement == "shard":
+        coord.place_shards("/d", table)
+    else:
+        coord.place_replicas("/d", table)
+    gateway = ScanGateway(coord, scheduler=AdaptiveScheduler(
+        steal=StealConfig(factor=steal_factor, min_batches=1),
+        tickets=TicketTable()))
+    reqs = [gateway.submit(ScanRequest(f"c{i}", "interactive", sql, "/d"))
+            for i in range(num_subscribers)]
+    gateway.run()
+
+    eng = Engine()
+    eng.register("/d", table)
+    solo = ThallusClient(ThallusServer(eng, Fabric())).run_query(sql, "/d")
+    solo_dicts = [b.to_pydict() for b in solo]
+    shared = 0
+    for req in reqs:
+        result = gateway.result(req.request_id)
+        shared += int(result.shared)
+        assert [b.to_pydict() for b in result.batches] == solo_dicts
+    assert shared == num_subscribers - 1     # exactly one fan-out ran
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.floats(-2.0, 2.0), st.integers(1, 4))
 def test_engine_filter_conservation(threshold, ncols):

@@ -1,0 +1,498 @@
+"""The repro.sched adaptive scheduler: work stealing (split at a lease
+boundary, re-lease to the fastest idle replica, resume correctness), shared
+tickets (coalescing, mid-flight join/cancel, multicast parity), and
+lease-boundary preemption (park/resume round-trips restoring the admission
+budget), plus their integration through the qos gateway, the loader, the
+batcher, and the report tables."""
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterCoordinator, MultiStreamPuller
+from repro.core import Fabric, FabricConfig, ThallusClient, ThallusServer
+from repro.data import ThallusLoader, make_token_table
+from repro.engine import Engine, make_numeric_table
+from repro.qos import (AdmissionConfig, AdmissionController, ClientClass,
+                       ScanGateway, ScanRequest, WeightedFairQueue)
+from repro.sched import (AdaptiveScheduler, PreemptConfig, PreemptibleScan,
+                         StealConfig, StealingPuller, TicketTable)
+
+ROWS = 1 << 17
+BATCH_ROWS = 1 << 13                     # -> 16 batches
+SQL = "SELECT c0, c1 FROM t"
+HEAVY_SQL = "SELECT c0, c1, c2, c3 FROM t"
+TABLE = make_numeric_table("t", ROWS, 4, batch_rows=BATCH_ROWS)
+
+
+def make_cluster(n, placement="shard", slow=None, slowdown=4.0,
+                 admission=None):
+    coord = ClusterCoordinator(admission=admission)
+    for i in range(n):
+        cfg = FabricConfig()
+        if slow is not None and i == slow:
+            cfg = FabricConfig(rpc_bw=cfg.rpc_bw / slowdown,
+                               rdma_bw=cfg.rdma_bw / slowdown)
+        coord.add_server(f"s{i}", ThallusServer(Engine(), Fabric(cfg)))
+    if placement == "shard":
+        coord.place_shards("/d", TABLE)
+    else:
+        coord.place_replicas("/d", TABLE)
+    return coord
+
+
+def _reference_batches(sql=SQL):
+    eng = Engine()
+    eng.register("/d", TABLE)
+    return ThallusClient(ThallusServer(eng, Fabric())).run_query(sql, "/d")
+
+
+def _assert_batches_equal(got, ref):
+    assert len(got) == len(ref)
+    for g, r in zip(got, ref):
+        np.testing.assert_array_equal(g.column("c0").values,
+                                      r.column("c0").values)
+        np.testing.assert_array_equal(g.column("c1").values,
+                                      r.column("c1").values)
+
+
+# ------------------------------------------------------------ work stealing
+
+
+def test_steal_moves_straggler_tail_and_preserves_bytes():
+    """The tentpole shape: one 4x-slow replica; stealing must fire, cut the
+    modeled critical path, and deliver byte-identical global output."""
+    coord = make_cluster(4, "replica", slow=3)
+    base = MultiStreamPuller(coord, coord.plan(SQL, "/d"),
+                             schedule="first_ready").run()
+
+    coord = make_cluster(4, "replica", slow=3)
+    puller = StealingPuller(coord, coord.plan(SQL, "/d"),
+                            steal=StealConfig())
+    got = {}
+    stats = puller.run(lambda i, b: got.setdefault(i, []).append(b))
+    assert stats.steals >= 1
+    assert len(stats.streams) > 4            # thief streams appended
+    assert stats.batches == base.batches and stats.bytes == base.bytes
+    assert stats.modeled_critical_path_s < base.modeled_critical_path_s
+    ev = stats.steal_events[0]
+    assert ev.victim == "s3" and ev.thief != "s3"
+    assert ev.num_batches >= 1 and ev.epoch_s > 0
+    # stolen ranges stay disjoint+contiguous: sorting by start_batch
+    # reproduces the solo scan exactly (steal-at-lease-boundary resume)
+    order = sorted(range(len(puller.pullers)),
+                   key=lambda i: puller.pullers[i].endpoint.start_batch)
+    flat = [b for i in order for b in got.get(i, [])]
+    _assert_batches_equal(flat, _reference_batches())
+
+
+def test_steal_seeds_thief_start_epoch():
+    """A stolen stream starts mid-scan: its start_s is the steal epoch, so
+    the modeled critical path stays an honest makespan (never shorter than
+    the epoch itself)."""
+    coord = make_cluster(4, "replica", slow=3)
+    puller = StealingPuller(coord, coord.plan(SQL, "/d"),
+                            steal=StealConfig())
+    stats = puller.run()
+    assert stats.steals >= 1
+    thieves = [s for s in stats.streams if s.start_s > 0]
+    assert thieves
+    assert stats.modeled_critical_path_s >= max(s.start_s for s in thieves)
+
+
+def test_no_steal_on_shard_placement_or_balanced_fleet():
+    # shard placement: nobody else holds the data — never steal
+    coord = make_cluster(4, "shard", slow=3)
+    stats = StealingPuller(coord, coord.plan(SQL, "/d"),
+                           steal=StealConfig()).run()
+    assert stats.steals == 0
+    # balanced replicas: nothing exceeds factor x median — never steal
+    coord = make_cluster(4, "replica")
+    stats = StealingPuller(coord, coord.plan(SQL, "/d"),
+                           steal=StealConfig()).run()
+    assert stats.steals == 0
+    _assert_batches_equal(_reference_batches(), _reference_batches())
+
+
+def test_steal_config_validation():
+    with pytest.raises(ValueError):
+        StealConfig(factor=0.5)
+    with pytest.raises(ValueError):
+        StealConfig(min_batches=0)
+
+
+def test_gateway_reassembles_stolen_scan_in_order():
+    """End to end through the gateway: stealing must not perturb global
+    scan order (the reassembler sorts actual endpoint ranges, including
+    stolen tails)."""
+    coord = make_cluster(4, "replica", slow=3)
+    gateway = ScanGateway(coord,
+                          scheduler=AdaptiveScheduler(steal=StealConfig()))
+    req = gateway.submit(ScanRequest("c", "interactive", SQL, "/d"))
+    gateway.run()
+    result = gateway.result(req.request_id)
+    assert result.cluster.steals >= 1
+    assert gateway.stats.steals >= 1
+    _assert_batches_equal(result.batches, _reference_batches())
+
+
+# ----------------------------------------------------------- shared tickets
+
+
+def test_ticket_table_lifecycle():
+    table = TicketTable()
+    key = table.key_for(SQL, "/d")
+    table.subscribe(key, 1)
+    table.subscribe(key, 2)
+    table.subscribe(key, 2)                  # idempotent
+    assert table.lookup(key).subscribers == [1, 2]
+    assert table.redeem(key, 2) is None      # nothing published yet
+    table.publish(key, 1, ["payload"], cluster=None)
+    ticket = table.redeem(key, 2)
+    assert ticket is not None and ticket.batches == ["payload"]
+    assert ticket.primary_id == 1 and ticket.subscribers == []
+    assert table.stats.hits == 1 and table.stats.misses == 1
+    # cancel of the last subscriber of an UNexecuted ticket drops it
+    key2 = table.key_for(SQL, "/e")
+    table.subscribe(key2, 3)
+    table.cancel(key2, 3)
+    assert table.lookup(key2) is None
+    assert table.stats.cancels == 1
+    # begin_drain forgets published results (stale across drains)
+    table.begin_drain()
+    assert table.lookup(key) is None
+
+
+def test_gateway_coalesces_identical_requests():
+    """N identical queued queries -> one fan-out + N-1 multicast grants,
+    all byte-identical, with per-subscriber class attribution."""
+    gateway = ScanGateway(make_cluster(4, "shard"),
+                          scheduler=AdaptiveScheduler(tickets=TicketTable()))
+    reqs = [gateway.submit(ScanRequest(f"c{i}", "interactive", SQL, "/d"))
+            for i in range(4)]
+    other = gateway.submit(ScanRequest("x", "interactive", HEAVY_SQL, "/d"))
+    gateway.run()
+    assert len(gateway.stats.cluster) == 2   # SQL fan-out + HEAVY_SQL
+    assert gateway.stats.ticket_hits == 3
+    ref = _reference_batches()
+    shared = []
+    for r in reqs:
+        result = gateway.result(r.request_id)
+        _assert_batches_equal(result.batches, ref)
+        shared.append(result.shared)
+        assert result.service_s == 0.0 or not result.shared
+    assert sorted(shared) == [False, True, True, True]
+    assert gateway.result(other.request_id) is not None
+    # multicast batches are copies, not views of the primary's result
+    primary = next(gateway.result(r.request_id) for r in reqs
+                   if not gateway.result(r.request_id).shared)
+    hit = next(gateway.result(r.request_id) for r in reqs
+               if gateway.result(r.request_id).shared)
+    assert (hit.batches[0].column("c0").values is not
+            primary.batches[0].column("c0").values)
+    # attribution: hits count granted batches for their class
+    cstats = gateway.stats.klass("interactive")
+    assert cstats.granted == 5 and cstats.ticket_hits == 3
+    assert cstats.batches == 5 * len(ref)
+
+
+def test_ticket_subscriber_cancel_and_midflight_join():
+    """A subscriber shed at dequeue cancels off the ticket without hurting
+    the others; a request joining after the primary was queued (mid-flight)
+    still coalesces."""
+    gateway = ScanGateway(
+        make_cluster(2, "shard"),
+        classes=[ClientClass("interactive", 4.0), ClientClass("batch", 1.0)],
+        scheduler=AdaptiveScheduler(tickets=TicketTable()),
+        est_service_s_per_cost=1e-7)    # optimistic: submit lets doomed in
+    heavy = gateway.submit(ScanRequest("h", "batch", HEAVY_SQL, "/d",
+                                       cost_hint=8.0))
+    # doomed joins the SQL ticket but its deadline passes the (optimistic)
+    # submit estimate and expires while queued behind heavy -> cancel at
+    # dequeue
+    doomed = gateway.submit(ScanRequest("d", "batch", SQL, "/d",
+                                        cost_hint=1.0, deadline_s=1e-5))
+    primary = gateway.submit(ScanRequest("p", "interactive", SQL, "/d"))
+    joiner = gateway.submit(ScanRequest("j", "interactive", SQL, "/d"))
+    assert doomed is not None                # survived the submit estimate
+    gateway.run()
+    tickets = gateway.scheduler.tickets
+    assert tickets.stats.cancels == 1
+    assert gateway.stats.klass("batch").shed == 1
+    assert gateway.stats.ticket_hits == 1    # joiner rode primary's ticket
+    ref = _reference_batches()
+    _assert_batches_equal(gateway.result(primary.request_id).batches, ref)
+    _assert_batches_equal(gateway.result(joiner.request_id).batches, ref)
+    assert gateway.result(heavy.request_id) is not None
+    assert gateway.result(doomed.request_id) is None
+
+
+def test_start_batch_offsets_resume_in_global_order():
+    """ScanRequest.start_batch is the ticket key's third leg and the
+    loader's resume cursor: replica plans push it down, shard plans trim."""
+    ref = _reference_batches()
+    for placement in ("shard", "replica"):
+        gateway = ScanGateway(make_cluster(2, placement))
+        req = gateway.submit(ScanRequest("c", "interactive", SQL, "/d",
+                                         start_batch=5))
+        gateway.run()
+        _assert_batches_equal(gateway.result(req.request_id).batches,
+                              ref[5:])
+    # replica push-down skips the transport; shard trim cannot
+    assert gateway.stats.cluster[0].batches == len(ref) - 5
+
+
+# --------------------------------------------------------------- preemption
+
+
+def test_preemptible_scan_round_trip_restores_admission_budget():
+    """park releases every stream slot back to the admission budget;
+    resume re-acquires them; the finished scan is byte-identical."""
+    adm = AdmissionController(AdmissionConfig(max_streams_per_client=8))
+    coord = make_cluster(2, "shard", admission=adm)
+    plan = coord.plan(SQL, "/d")
+    scan = PreemptibleScan(MultiStreamPuller(coord, plan, client_id="c"))
+    assert adm.active_streams("c") == 2
+    scan.run_round()
+    scan.park()
+    assert scan.parked and adm.active_streams("c") == 0   # budget restored
+    with pytest.raises(RuntimeError):
+        scan.run_round()                     # parked streams refuse to pull
+    scan.resume()
+    assert adm.active_streams("c") == 2      # slots re-acquired
+    while not scan.done:
+        scan.run_round()
+    assert adm.active_streams("c") == 0      # drained leases released
+    from repro.qos.gateway import reassemble
+    _assert_batches_equal(reassemble(plan, scan.per_stream),
+                          _reference_batches())
+    assert scan.park_count == 1
+    assert sum(s.parks for s in scan.stats().streams) == 2
+
+
+def test_preempt_resume_backpressure_reparks_cleanly():
+    adm = AdmissionController(AdmissionConfig(max_streams_per_client=2))
+    coord = make_cluster(2, "shard", admission=adm)
+    scan = PreemptibleScan(MultiStreamPuller(coord, coord.plan(SQL, "/d"),
+                                             client_id="c"))
+    scan.run_round()
+    scan.park()
+    adm.acquire_stream("c")                  # someone else took a slot
+    from repro.qos import Backpressure
+    with pytest.raises(Backpressure):
+        scan.resume()
+    assert scan.parked                       # nothing leaked half-open
+    assert adm.active_streams("c") == 1      # only the foreign slot remains
+    adm.release_stream("c")
+    scan.resume()
+    while not scan.done:
+        scan.run_round()
+    assert adm.active_streams("c") == 0
+
+
+def test_gateway_preempts_batch_for_interactive_arrival():
+    """The tentpole flow: a heavy batch scan starts alone; an interactive
+    request arrives mid-service on the modeled clock; the batch parks at a
+    lease boundary, the lookup runs, the batch resumes and completes
+    byte-identically."""
+    gateway = ScanGateway(make_cluster(4, "shard"),
+                          scheduler=AdaptiveScheduler(preempt=PreemptConfig()))
+    heavy = gateway.submit(ScanRequest("h", "batch", HEAVY_SQL, "/d",
+                                       cost_hint=8.0))
+    ui = gateway.submit(ScanRequest("ui", "interactive", SQL, "/d",
+                                    arrival_s=1e-5))
+    results = gateway.run()
+    assert len(results) == 2
+    hres = gateway.result(heavy.request_id)
+    assert hres.preemptions >= 1
+    assert gateway.stats.preemptions >= 1
+    assert gateway.stats.klass("batch").preemptions >= 1
+    _assert_batches_equal(hres.batches, _reference_batches(HEAVY_SQL))
+    ures = gateway.result(ui.request_id)
+    _assert_batches_equal(ures.batches, _reference_batches())
+    # the lookup ran during the batch scan's parked window: it was granted
+    # before the batch finished its (preempted) service
+    assert ures.grant_latency_s < hres.service_s + hres.grant_latency_s
+
+
+def test_plain_gateway_ignores_future_arrivals():
+    """Regression: without a preemption-aware scheduler the gateway's plain
+    pop ignores arrival times — popping a future-arrival request must not
+    drag the clock forward and spuriously shed co-queued requests."""
+    gateway = ScanGateway(make_cluster(2, "shard"))
+    b = gateway.submit(ScanRequest("b", "batch", SQL, "/d", deadline_s=5.0))
+    gateway.submit(ScanRequest("a", "interactive", SQL, "/d",
+                               arrival_s=10.0))
+    gateway.run()
+    assert gateway.stats.shed == 0
+    assert gateway.result(b.request_id) is not None
+
+
+def test_preemptible_service_respects_stream_quota():
+    """Regression: the preemptible path must bill the same quota-capped
+    makespan as the one-shot path (streams serialize onto quota lanes)."""
+    results = {}
+    for scheduler in (None, AdaptiveScheduler(preempt=PreemptConfig())):
+        adm = AdmissionController(AdmissionConfig(max_streams_per_client=2))
+        gateway = ScanGateway(make_cluster(4, "shard"), admission=adm,
+                              scheduler=scheduler)
+        req = gateway.submit(ScanRequest("h", "batch", SQL, "/d"))
+        gateway.run()
+        results[scheduler is None] = gateway.result(req.request_id)
+    plain, preemptible = results[True], results[False]
+    # same 4 streams serialized onto 2 lanes: service within noise (the
+    # clock components include measured alloc time, so compare loosely)
+    assert preemptible.service_s >= 0.5 * plain.service_s
+
+
+def test_loader_gateway_transport_evicts_consumed_results():
+    coord = _token_cluster()
+    gateway = ScanGateway(coord)
+    loader = ThallusLoader([], "SELECT tokens FROM tok", "/tok",
+                           seq_len=32, batch_seqs=8, transport="gateway",
+                           gateway=gateway)
+    assert len(list(loader)) == 8
+    assert gateway.results == {}             # epoch result not retained
+
+
+def test_wfq_arrival_aware_pop_and_preemptor_check():
+    q = WeightedFairQueue([ClientClass("ui", 4.0), ClientClass("bg", 1.0)])
+
+    class Item:
+        def __init__(self, name, klass, arrival_s):
+            self.name, self.klass, self.arrival_s = name, klass, arrival_s
+
+    late_ui = Item("ui0", "ui", 5.0)
+    early_bg = Item("bg0", "bg", 0.0)
+    q.push(late_ui, "ui", cost=1.0)
+    q.push(early_bg, "bg", cost=1.0)
+    assert not q.has_preemptor("bg", now_s=1.0)   # ui hasn't arrived yet
+    assert q.has_preemptor("bg", now_s=5.0)
+    assert not q.has_preemptor("ui", now_s=9.0)   # nothing outweighs ui
+    # arrival-aware pop: at t=1 only bg has arrived, despite ui's lower tag
+    assert q.pop(1.0) is early_bg
+    # nothing arrived: fall back to global min (caller advances its clock)
+    assert q.pop(1.0) is late_ui
+    # idle fallback serves the EARLIEST arrival, not the smallest tag —
+    # jumping to a later arrival would idle past (and shed) the earlier one
+    soon_bg = Item("bg1", "bg", 2.0)
+    later_ui = Item("ui1", "ui", 9.0)        # lower tag (weight 4)...
+    q.push(later_ui, "ui", cost=1.0)
+    q.push(soon_bg, "bg", cost=1.0)
+    assert q.pop(0.0) is soon_bg             # ...but bg1 arrives first
+
+
+def test_preemption_composes_with_stealing_and_tickets():
+    """All three mechanisms on at once (AdaptiveScheduler.default): a heavy
+    batch scan is preempted by two identical interactive arrivals; the
+    first lookup executes (its straggler is steal-eligible), the second
+    rides its ticket, then the batch scan resumes and completes."""
+    coord = make_cluster(4, "replica", slow=3)
+    gateway = ScanGateway(coord, scheduler=AdaptiveScheduler.default())
+    heavy = gateway.submit(ScanRequest("h", "batch", HEAVY_SQL, "/d",
+                                       cost_hint=8.0))
+    ui1 = gateway.submit(ScanRequest("u1", "interactive", SQL, "/d",
+                                     arrival_s=1e-5))
+    ui2 = gateway.submit(ScanRequest("u2", "interactive", SQL, "/d",
+                                     arrival_s=1e-5))
+    gateway.run()
+    ref = _reference_batches()
+    for req in (ui1, ui2):
+        _assert_batches_equal(gateway.result(req.request_id).batches, ref)
+    _assert_batches_equal(gateway.result(heavy.request_id).batches,
+                          _reference_batches(HEAVY_SQL))
+    assert gateway.stats.ticket_hits == 1    # ui2 rode ui1's ticket
+    assert gateway.stats.preemptions >= 1    # heavy parked for the lookups
+    assert gateway.result(heavy.request_id).preemptions >= 1
+    assert gateway.stats.granted == 3
+
+
+# ------------------------------------------------------- caller surfacing
+
+
+def _token_cluster():
+    table = make_token_table("tok", num_seqs=64, seq_len=32, vocab_size=128,
+                             seqs_per_batch=16)
+    coord = ClusterCoordinator()
+    for i in range(2):
+        eng = Engine()
+        eng.register("/tok", table)
+        coord.add_server(f"s{i}", ThallusServer(eng, Fabric()))
+    coord.place_replicas("/tok", table)
+    return coord
+
+
+def test_loader_gateway_transport_surfaces_sharing():
+    coord = _token_cluster()
+    gateway = ScanGateway(coord,
+                          scheduler=AdaptiveScheduler(tickets=TicketTable()))
+    # another tenant already queued the identical scan; the loader's
+    # request coalesces onto its ticket and is served by multicast
+    gateway.submit(ScanRequest("tenant", "interactive",
+                               "SELECT tokens FROM tok", "/tok"))
+    loader = ThallusLoader([], "SELECT tokens FROM tok", "/tok",
+                           seq_len=32, batch_seqs=8, transport="gateway",
+                           gateway=gateway, client_id="trainer")
+    chunks = list(loader)
+    assert len(chunks) == 8                  # 64 seqs / 8 per chunk
+    assert loader.stats.shared_scans == 1
+    assert loader.stats.batches == 4
+    # resume cursor is the global offset, usable as request.start_batch
+    assert loader.state_dict()["batch_offset"] == 4
+    solo = ThallusLoader([coord.server("s0")], "SELECT tokens FROM tok",
+                         "/tok", seq_len=32, batch_seqs=8)
+    for got, want in zip(chunks, solo):
+        np.testing.assert_array_equal(got["tokens"], want["tokens"])
+
+
+def test_loader_gateway_transport_surfaces_preemption():
+    coord = _token_cluster()
+    gateway = ScanGateway(coord,
+                          scheduler=AdaptiveScheduler(preempt=PreemptConfig()))
+    loader = ThallusLoader([], "SELECT tokens FROM tok", "/tok",
+                           seq_len=32, batch_seqs=8, transport="gateway",
+                           gateway=gateway, klass="batch")
+    # an interactive lookup arrives while the loader's scan is in flight
+    gateway.submit(ScanRequest("ui", "interactive",
+                               "SELECT seq_id FROM tok", "/tok",
+                               arrival_s=1e-6))
+    chunks = list(loader)
+    assert len(chunks) == 8
+    assert loader.stats.preemptions >= 1
+
+
+def test_batcher_ingest_scan_reports_sharing():
+    import jax.numpy as jnp
+    from repro.serving import Batcher
+
+    coord = _token_cluster()
+    gateway = ScanGateway(coord,
+                          scheduler=AdaptiveScheduler(tickets=TicketTable()))
+
+    def prefill(tokens):
+        B, S = tokens.shape
+        return jnp.ones((B, S, 64)), {"k": jnp.zeros((B, 1, S, 1))}
+
+    def decode(cache, tokens, position):
+        return jnp.ones((tokens.shape[0], 1, 64)), cache
+
+    b1 = Batcher(prefill, decode, batch_size=16)
+    b2 = Batcher(prefill, decode, batch_size=16)
+    r1 = b1.submit_scan(gateway, "SELECT seq_id, tokens FROM tok", "/tok")
+    r2 = b2.submit_scan(gateway, "SELECT seq_id, tokens FROM tok", "/tok")
+    gateway.run()
+    n1, shared1 = b1.ingest_scan(gateway, r1, seq_len=8)
+    n2, shared2 = b2.ingest_scan(gateway, r2, seq_len=8)
+    assert n1 == n2 and n1 > 0
+    assert sorted([shared1, shared2]) == [False, True]
+    assert gateway.stats.ticket_hits == 1
+
+
+def test_sched_table_renders():
+    from repro.utils.report import sched_table
+    gateway = ScanGateway(make_cluster(2, "shard"),
+                          scheduler=AdaptiveScheduler.default())
+    for i in range(2):
+        gateway.submit(ScanRequest(f"c{i}", "interactive", SQL, "/d"))
+    gateway.run()
+    out = sched_table(gateway.stats)
+    assert "ticket hits" in out and "preemptions" in out
+    assert "steals=" in out and "hit_rate=0.50" in out

@@ -20,8 +20,9 @@ summary (queue depth, shed count, per-class throughput). The acceptance
 check: with quotas enabled, the interactive class's p50 grant latency drops
 under the same heavy-client load.
 
-Sched axes (the ``repro.sched`` adaptive scheduler), both self-asserting so
-CI smoke runs double as acceptance checks:
+Sched axes (the ``repro.sched`` adaptive scheduler) and the distributed
+admission axis, all self-asserting so CI smoke runs double as acceptance
+checks:
 
 * ``--scenario straggler`` — one 4×-slow replica in a 4-replica scan, work
   stealing off vs on. Asserts stealing cuts the modeled critical path by
@@ -29,6 +30,12 @@ CI smoke runs double as acceptance checks:
 * ``--scenario sharing`` — N=4 identical queued queries, shared tickets off
   vs on. Asserts the coalesced run costs < 2× ONE query's server-side work
   (one fan-out executes; three subscribers are served by multicast).
+* ``--scenario admission`` — centralized ``AdmissionController`` vs
+  ``qos.ShardedAdmission`` (one quota shard per server). Asserts the
+  N-shard interactive p50 grant latency stays within 1.5× of the
+  centralized controller's, the 1-shard run matches it (drop-in), and a
+  seeded acquire/release storm with borrowing + reconciles never admits
+  past the global per-client quota or cluster-wide cap.
 
 Runnable standalone::
 
@@ -51,8 +58,9 @@ from repro.cluster import (BufferPool, ClusterCoordinator, MultiStreamPuller,
 from repro.core import (Fabric, FabricConfig, RpcClient, ThallusClient,
                         ThallusServer)
 from repro.engine import Engine, make_numeric_table
-from repro.qos import (AdmissionConfig, AdmissionController, ClientClass,
-                       ScanGateway, ScanRequest)
+from repro.qos import (AdmissionConfig, AdmissionController, Backpressure,
+                       ClientClass, ScanGateway, ScanRequest,
+                       ShardedAdmission)
 from repro.sched import AdaptiveScheduler, StealConfig, TicketTable
 
 TOTAL_COLS = 8
@@ -133,6 +141,39 @@ def run_cluster() -> list[Row]:
     return rows
 
 
+HEAVY_SQL = ("SELECT " + ", ".join(f"c{i}" for i in range(TOTAL_COLS))
+             + " FROM t")
+LIGHT_SQL = "SELECT c0 FROM t"
+
+
+def _contention_gateway(fabric_cfg, table, admission,
+                        fair: bool = True) -> ScanGateway:
+    """The shared contention fixture: a CONTENTION_SHARDS-way shard cluster
+    behind a two-class gateway — run_contention and run_admission must
+    benchmark the SAME workload, so both build it here."""
+    coordinator = ClusterCoordinator()
+    for i in range(CONTENTION_SHARDS):
+        coordinator.add_server(f"s{i}", ThallusServer(Engine(),
+                                                      Fabric(fabric_cfg)))
+    coordinator.place_shards("/d", table)
+    return ScanGateway(
+        coordinator,
+        classes=[ClientClass("interactive", 4.0), ClientClass("batch", 1.0)],
+        admission=admission, fair=fair)
+
+
+def _submit_contention_mix(gateway: ScanGateway,
+                           ui_deadline_s: float | None = None) -> None:
+    """The contention shape: a heavy client floods first, interactive
+    lookups arrive behind it."""
+    for _ in range(4):
+        gateway.submit(ScanRequest("heavy", "batch", HEAVY_SQL, "/d",
+                                   cost_hint=8.0))
+    for _ in range(6):
+        gateway.submit(ScanRequest("ui", "interactive", LIGHT_SQL, "/d",
+                                   cost_hint=1.0, deadline_s=ui_deadline_s))
+
+
 def run_contention() -> list[Row]:
     """Clients × quota axis: heavy batch scans vs interactive lookups
     through the qos gateway, QoS off (FIFO, unlimited) vs on (WFQ + quota +
@@ -140,34 +181,18 @@ def run_contention() -> list[Row]:
     base_cfg = calibrated_fabric().config
     table = make_numeric_table("t", CONTENTION_ROWS, TOTAL_COLS,
                                batch_rows=CONTENTION_BATCH_ROWS)
-    heavy_sql = ("SELECT " + ", ".join(f"c{i}" for i in range(TOTAL_COLS))
-                 + " FROM t")
-    light_sql = "SELECT c0 FROM t"
     rows: list[Row] = []
     for quotas in (False, True):
-        coordinator = ClusterCoordinator()
-        for i in range(CONTENTION_SHARDS):
-            coordinator.add_server(f"s{i}", ThallusServer(Engine(),
-                                                          Fabric(base_cfg)))
-        coordinator.place_shards("/d", table)
         admission = AdmissionController(AdmissionConfig(
             max_streams_per_client=2, lease_rate_per_s=1e3,
             lease_burst=4)) if quotas else None
-        gateway = ScanGateway(
-            coordinator,
-            classes=[ClientClass("interactive", 4.0), ClientClass("batch", 1.0)],
-            admission=admission, fair=quotas)
-        # the contention shape: a heavy client floods first, interactive
-        # lookups arrive behind it, and a late burst has a deadline so tight
-        # it must be shed under any ordering (the shed counter's fixture)
-        for _ in range(4):
-            gateway.submit(ScanRequest("heavy", "batch", heavy_sql, "/d",
-                                       cost_hint=8.0))
-        for _ in range(6):
-            gateway.submit(ScanRequest("ui", "interactive", light_sql, "/d",
-                                       cost_hint=1.0, deadline_s=50e-3))
+        gateway = _contention_gateway(base_cfg, table, admission,
+                                      fair=quotas)
+        # ...and a late burst with a deadline so tight it must be shed
+        # under any ordering (the shed counter's fixture)
+        _submit_contention_mix(gateway, ui_deadline_s=50e-3)
         for _ in range(2):
-            gateway.submit(ScanRequest("burst", "batch", heavy_sql, "/d",
+            gateway.submit(ScanRequest("burst", "batch", HEAVY_SQL, "/d",
                                        cost_hint=8.0, deadline_s=1e-6))
         gateway.run()
         qos = gateway.stats
@@ -276,11 +301,113 @@ def run_sharing() -> list[Row]:
     return rows
 
 
+def run_admission() -> list[Row]:
+    """Centralized vs sharded admission, self-asserting twice over.
+
+    1. *Latency*: the contention workload (heavy batch floods, interactive
+       lookups behind it) runs through the gateway three times — centralized
+       ``AdmissionController``, 1-shard ``ShardedAdmission`` (the drop-in
+       deployment; its byte-for-byte replay equivalence is proven
+       deterministically in ``tests/test_admission_dist.py``), and one
+       shard per server. Both sharded runs must keep the interactive p50
+       grant latency within 1.5× of the centralized controller's
+       (per-server token buckets grant concurrently, so N shards are
+       usually at parity or *faster*; the bound guards borrow and
+       reconcile overhead). The fabric is slowed 500× so modeled service
+       time dwarfs the measured alloc/assembly noise in each stream clock.
+    2. *Safety*: a seeded acquire/release storm across the shards, with
+       borrowing on and periodic reconciles, must never over-admit — peak
+       concurrent streams per client ≤ the global quota, cluster-wide peak
+       ≤ the global cap.
+    """
+    base_cfg = calibrated_fabric().config
+    slow_cfg = FabricConfig(rpc_bw=base_cfg.rpc_bw / 500,
+                            rdma_bw=base_cfg.rdma_bw / 500)
+    table = make_numeric_table("t", CONTENTION_ROWS, TOTAL_COLS,
+                               batch_rows=CONTENTION_BATCH_ROWS)
+    admission_cfg = AdmissionConfig(max_streams_per_client=2,
+                                    max_streams_total=8,
+                                    lease_rate_per_s=1e3, lease_burst=4)
+
+    def p50(num_shards: int | None) -> tuple[float, Row]:
+        if num_shards is None:
+            admission = AdmissionController(admission_cfg)
+        else:
+            admission = ShardedAdmission(
+                admission_cfg, [f"s{i}" for i in range(num_shards)])
+        gateway = _contention_gateway(slow_cfg, table, admission)
+        _submit_contention_mix(gateway)
+        gateway.run()
+        c = gateway.stats.klass("interactive")
+        assert c.granted == 6
+        tag = "central" if num_shards is None else f"shards{num_shards}"
+        return c.p50_grant_latency_s, Row(
+            f"admission_{tag}", c.p50_grant_latency_s * 1e6,
+            f"granted={gateway.stats.granted}/{gateway.stats.submitted} "
+            f"throttle_us={gateway.stats.throttle_wait_s * 1e6:.1f} | "
+            + gateway.stats.summary())
+
+    central, row_central = p50(None)
+    one_shard, row_one = p50(1)
+    sharded, row_n = p50(CONTENTION_SHARDS)
+    rows = [row_central, row_one, row_n]
+    # the byte-for-byte 1-shard equivalence is proven deterministically in
+    # tests/test_admission_dist.py (recorded-trace replay); here both the
+    # 1-shard drop-in and the N-shard deployment must hold the latency SLO
+    for tag, p in (("1", one_shard), (str(CONTENTION_SHARDS), sharded)):
+        ratio = p / central if central > 0 else 1.0
+        rows.append(Row(f"admission_p50_ratio_shards{tag}", ratio,
+                        f"vs centralized interactive p50; want <= 1.5"))
+        assert ratio <= 1.5, (
+            f"{tag}-shard admission costs {ratio:.2f}x the centralized "
+            f"controller's interactive p50 grant latency (ceiling: 1.5x)")
+
+    # ---- safety: a seeded storm must never over-admit the global budget
+    import numpy as np
+    quota, cap = 3, 8
+    storm = ShardedAdmission(
+        AdmissionConfig(max_streams_per_client=quota, max_streams_total=cap,
+                        lease_rate_per_s=1e3, lease_burst=8),
+        [f"s{i}" for i in range(CONTENTION_SHARDS)])
+    rng = np.random.default_rng(42)
+    held: list[tuple[str, str]] = []
+    denials, now_s = 0, 0.0
+    for _ in range(1000):
+        now_s += float(rng.uniform(0, 5e-3))
+        client = f"c{rng.integers(4)}"
+        server = f"s{rng.integers(CONTENTION_SHARDS)}"
+        if held and rng.random() < 0.45:
+            c, s = held.pop(int(rng.integers(len(held))))
+            storm.release_stream(c, server_id=s, now_s=now_s)
+        else:
+            try:
+                storm.acquire_stream(client, server_id=server)
+                held.append((client, server))
+            except Backpressure:
+                denials += 1
+        storm.lease_wait_s(now_s, 1, server_id=server)   # drives reconciles
+    agg = storm.stats
+    peak_client = max(storm.peak_streams(f"c{i}") for i in range(4))
+    rows.append(Row(
+        "admission_storm_peak", storm.peak_total,
+        f"ops=1000 denials={denials} borrows={agg.borrows} "
+        f"reconciles={agg.reconciles} peak_client={peak_client} "
+        f"(quota={quota}) peak_total={storm.peak_total} (cap={cap})"))
+    assert denials > 0 and agg.borrows > 0 and agg.reconciles > 0, (
+        "storm too gentle: limits, borrowing and reconciliation must all "
+        "have been exercised")
+    assert peak_client <= quota and storm.peak_total <= cap, (
+        f"distributed admission over-admitted: peak_client={peak_client} "
+        f"(quota {quota}), peak_total={storm.peak_total} (cap {cap})")
+    return rows
+
+
 _SCENARIOS = {"fig2": lambda transport: run(transport),
               "cluster": lambda transport: run_cluster(),
               "contention": lambda transport: run_contention(),
               "straggler": lambda transport: run_straggler(),
-              "sharing": lambda transport: run_sharing()}
+              "sharing": lambda transport: run_sharing(),
+              "admission": lambda transport: run_admission()}
 
 
 def main() -> None:
@@ -299,7 +426,8 @@ def main() -> None:
         scenarios = ["cluster"]
     elif args.scenario == "all":
         # fig2 already appends cluster
-        scenarios = ["fig2", "contention", "straggler", "sharing"]
+        scenarios = ["fig2", "contention", "straggler", "sharing",
+                     "admission"]
     elif args.scenario is not None:
         scenarios = [args.scenario]
     else:

@@ -5,10 +5,15 @@ results to a client over BOTH transports, prints the paper's headline
 comparison (zero-copy vs serialize), scales the same scan out as a
 partitioned multi-stream pull through the ``repro.cluster`` dataplane,
 routes contending clients through the ``repro.qos`` gateway so a heavy
-batch scan cannot starve interactive traffic, and finally turns on the
-``repro.sched`` adaptive scheduler: a 4×-slow replica is rescued by work
-stealing, identical queued queries coalesce onto a shared ticket, and an
-interactive arrival preempts a batch scan at a lease boundary.
+batch scan cannot starve interactive traffic, turns on the ``repro.sched``
+adaptive scheduler — a 4×-slow replica is rescued by work stealing,
+identical queued queries coalesce onto a shared ticket, and an interactive
+arrival preempts a batch scan at a lease boundary — and finally shards the
+admission budget per server (``qos.ShardedAdmission``): a saturated shard
+borrows slack from its least-loaded peer, the modeled-time reconciler
+levels capacity and lease tokens back out, and a batch client closing its
+streams mid-scan lets the gateway re-plan an interactive fan-out onto the
+freed lanes.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -19,10 +24,11 @@ from repro.cluster import (BufferPool, ClusterCoordinator, MultiStreamPuller,
 from repro.core import (Fabric, FabricConfig, RpcClient, ThallusClient,
                         ThallusServer)
 from repro.engine import Engine, make_numeric_table
-from repro.qos import (AdmissionConfig, AdmissionController, ClientClass,
-                       ScanGateway, ScanRequest)
+from repro.qos import (AdmissionConfig, AdmissionController, Backpressure,
+                       ClientClass, ScanGateway, ScanRequest,
+                       ShardedAdmission)
 from repro.sched import AdaptiveScheduler, StealConfig
-from repro.utils.report import sched_table
+from repro.utils.report import admission_table, sched_table
 
 
 def main() -> None:
@@ -159,6 +165,60 @@ def main() -> None:
           f"dashboards), {qos.preemptions} preemption(s) parked the heavy "
           f"scan at a lease boundary, {qos.steals} steal(s) mid-query")
     print(sched_table(qos))
+
+    # -- distributed admission: per-server quota shards ---------------------
+    # the global budget (4 streams/client, 8 cluster-wide) is split across
+    # one shard per server; grants touch only the endpoint's shard
+    sharded = ShardedAdmission(
+        AdmissionConfig(max_streams_per_client=4, max_streams_total=8),
+        [f"s{i}" for i in range(4)])
+    # s0's quota slice is 1 and its total-cap slice is 2, so three local
+    # acquires borrow 3 units: 2 per-client-quota + 1 total-cap
+    for _ in range(3):
+        sharded.acquire_stream("trainer", server_id="s0")
+    try:                               # the global quota still binds exactly
+        for _ in range(2):
+            sharded.acquire_stream("trainer", server_id="s1")
+    except Backpressure as exc:
+        print(f"distributed admission: shard s0 borrowed "
+              f"{sharded.stats.borrows} slot(s) from its least-loaded "
+              f"peers; global quota denial after "
+              f"{sharded.active_streams('trainer')} streams "
+              f"(retry after {exc.retry_after_s * 1e3:.1f} ms)")
+    for _ in range(3):
+        sharded.release_stream("trainer", server_id="s0")
+    report = sharded.reconcile(now_s=50e-3)
+    print(f"  reconcile returned {report.capacity_returned} borrowed "
+          f"slot(s) to their lenders (balanced allocation restored)")
+
+    # a batch client closing streams mid-scan widens an interactive fan-out:
+    # the gateway re-plans onto the freed lanes at the modeled release time
+    coord = ClusterCoordinator()
+    for i in range(4):
+        coord.add_server(f"s{i}", ThallusServer(Engine(), Fabric()))
+    coord.place_shards("/data/events", engine.catalog.get("/data/events"))
+    service = {}
+    for closes_mid_scan in (False, True):
+        adm = ShardedAdmission(
+            AdmissionConfig(max_streams_per_client=4, max_streams_total=4),
+            [f"s{i}" for i in range(4)])
+        replan_gateway = ScanGateway(coord, admission=adm)
+        adm.acquire_stream("trainer", server_id="s0")   # holds half the cap
+        adm.acquire_stream("trainer", server_id="s1")
+        req = replan_gateway.submit(ScanRequest("dashboard", "interactive",
+                                                sql, "/data/events"))
+        if closes_mid_scan:
+            for sid in ("s0", "s1"):
+                adm.release_stream("trainer", server_id=sid, now_s=1e-7)
+        replan_gateway.run()
+        service[closes_mid_scan] = \
+            replan_gateway.result(req.request_id).service_s
+    print(f"  re-plan on freed slots: capped fan-out served in "
+          f"{service[False]*1e3:.2f} ms; with the batch client closing "
+          f"mid-scan {service[True]*1e3:.2f} ms "
+          f"({service[False]/service[True]:.2f}x, "
+          f"{replan_gateway.stats.replans} replan(s))")
+    print(admission_table(sharded.stats))
 
 
 if __name__ == "__main__":

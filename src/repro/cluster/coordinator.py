@@ -18,8 +18,12 @@ The coordinator is the control-plane brain the dataplane modules lean on:
   typed, so there is no cluster→qos import) gates every lease grant:
   ``open_stream`` acquires a per-client stream slot (raising
   ``qos.Backpressure`` at the quota or over the memory budget) and
-  ``close_stream`` releases it. The qos ``ScanGateway`` meters at request
-  granularity instead, so a gateway's coordinator runs without one.
+  ``close_stream`` releases it. Admission checks are routed **per server**:
+  the endpoint's ``server_id`` rides along on every acquire/release, so a
+  :class:`repro.qos.ShardedAdmission` meters each lease against that
+  server's own quota shard (a centralized controller simply ignores the
+  routing hint). The qos ``ScanGateway`` meters at request granularity
+  instead, so a gateway's coordinator runs without one.
 """
 from __future__ import annotations
 
@@ -111,16 +115,20 @@ class ClusterCoordinator:
     def open_stream(self, endpoint: Endpoint,
                     client_id: str = "default") -> ScanHandle:
         """Open one stream lease; admission-gated when a controller is set
-        (may raise ``qos.Backpressure`` with a retry-after hint)."""
+        (may raise ``qos.Backpressure`` with a retry-after hint). The check
+        is routed to the endpoint server's quota shard when the controller
+        is sharded (``server_id=`` is ignored by a centralized one)."""
         if self.admission is not None:
-            self.admission.acquire_stream(client_id)
+            self.admission.acquire_stream(client_id,
+                                          server_id=endpoint.server_id)
         try:
             server = self.server(endpoint.server_id)
             return server.init_scan(endpoint.sql, endpoint.dataset,
                                     start_batch=endpoint.start_batch)
         except BaseException:
             if self.admission is not None:
-                self.admission.release_stream(client_id)
+                self.admission.release_stream(client_id,
+                                              server_id=endpoint.server_id)
             raise
 
     def resume_stream(self, endpoint: Endpoint, delivered: int) -> ScanHandle:
@@ -145,9 +153,17 @@ class ClusterCoordinator:
             client_id=client_id)
 
     def close_stream(self, endpoint: Endpoint, uid: str,
-                     client_id: str = "default") -> None:
+                     client_id: str = "default",
+                     now_s: float | None = None) -> None:
+        """Release the lease and its admission slot. ``now_s`` is an
+        optional timestamp on the admission controller's modeled timeline,
+        forwarded to its freed-slot callbacks; leave it ``None`` when the
+        caller has no clock on that timeline (listeners then stamp their
+        own — per-stream scan clocks do NOT qualify, they are relative)."""
         if self.admission is not None:
-            self.admission.release_stream(client_id)
+            self.admission.release_stream(client_id,
+                                          server_id=endpoint.server_id,
+                                          now_s=now_s)
         server = self.server(endpoint.server_id)
         if uid in server.reader_map:   # may already be reclaimed/evicted
             server.finalize(uid)

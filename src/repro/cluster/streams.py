@@ -225,6 +225,8 @@ class StreamPuller:
         self.parked = True
         self.stats.parks += 1
         self._prefetch_budget_s = 0.0    # the pipeline is cold after a park
+        # no now_s: the stream clock is scan-relative, not on the admission
+        # controller's timeline — release listeners stamp their own clocks
         self.coordinator.close_stream(self.endpoint, self._handle.uuid,
                                       client_id=self.client_id)
         self._handle = None
@@ -293,8 +295,11 @@ class StreamPuller:
         admission = self.coordinator.admission
         if admission is not None:
             # token-bucket lease metering: a throttled grant charges its
-            # modeled wait to this stream's clock (backpressure signal)
-            wait = admission.lease_wait_s(self.stats.clock_s, 1)
+            # modeled wait to this stream's clock (backpressure signal).
+            # Routed per server so a sharded controller meters this lease
+            # against the endpoint's own bucket shard.
+            wait = admission.lease_wait_s(self.stats.clock_s, 1,
+                                          server_id=self.endpoint.server_id)
             self.stats.throttle_wait_s += wait
             self.stats.clock_s += wait
         self._lease_out = []

@@ -33,11 +33,20 @@ round-trip the cursor through the checkpoint manifest. Cluster mode tracks
 *per-stream* offsets (the merged order is only defined per stream).
 
 Cluster mode is admission-aware: pass a ``qos.AdmissionController`` (plus a
-``client_id``) and every stream lease is granted through it. A denied grant
+``client_id``) and every stream lease is granted through it. A
+``qos.ShardedAdmission`` works identically — the loader's coordinator names
+its servers ``s0..sN-1`` and routes every lease to the endpoint server's
+quota shard, so build the controller over the same ids
+(``ShardedAdmission(cfg, [f"s{i}" for i in range(n)])``). A denied grant
 — stream quota hit, registered-memory budget exhausted — surfaces to the
-caller as :class:`repro.qos.Backpressure` with a ``retry_after_s`` hint;
-the loader's cursor state is unchanged, so the caller simply waits and
-re-iterates (or narrows ``num_streams`` under its quota).
+caller as :class:`repro.qos.Backpressure` with a ``retry_after_s`` hint and
+bumps ``LoaderStats.backpressures``; the loader's cursor state is
+unchanged, so the caller simply waits and re-iterates (or narrows
+``num_streams`` under its quota). Gateway mode never sees that exception —
+the gateway queues or sheds instead — so a scan shed or failed while
+queued yields an **empty epoch** with ``backpressures`` bumped and the
+cursor unchanged: check it to distinguish "retry later" from "dataset
+exhausted".
 """
 from __future__ import annotations
 
@@ -60,6 +69,7 @@ class LoaderStats:
     transport_s: float = 0.0
     shared_scans: int = 0        # gateway scans served by ticket multicast
     preemptions: int = 0         # times a gateway scan parked mid-flight
+    backpressures: int = 0       # admission denials surfaced to the caller
 
 
 class ThallusLoader:
@@ -154,12 +164,18 @@ class ThallusLoader:
         request = self.gateway.submit(ScanRequest(
             self.client_id, self.klass, self.sql, self.dataset,
             num_streams=self.num_streams, start_batch=self._offset))
-        if request is None:
-            return                      # shed at submit (deadline policy)
+        if request is None:             # shed at submit (deadline policy)
+            self.stats.backpressures += 1
+            return
         self.gateway.run()
         result = self.gateway.result(request.request_id)
         if result is None:
-            return                      # shed/failed while queued
+            # shed or failed while queued: the gateway converts admission
+            # denials to sheds instead of raising, so the empty epoch is
+            # flagged here — callers distinguish it from dataset
+            # exhaustion via stats.backpressures and retry
+            self.stats.backpressures += 1
+            return
         self.stats.shared_scans += int(result.shared)
         self.stats.preemptions += result.preemptions
         self.stats.stream_resumes += result.cluster.resumes
@@ -212,9 +228,15 @@ class ThallusLoader:
         # Backpressure from an admission controller propagates from here:
         # no lease opened yet counts against the cursor, so the caller can
         # retry after `retry_after_s` with state intact
-        puller = MultiStreamPuller(coordinator, plan, pool=pool,
-                                   schedule="round_robin",
-                                   client_id=self.client_id)
+        try:
+            puller = MultiStreamPuller(coordinator, plan, pool=pool,
+                                       schedule="round_robin",
+                                       client_id=self.client_id)
+        except Exception as exc:
+            # duck-typed qos.Backpressure (data -> qos stays import-free)
+            if hasattr(exc, "retry_after_s"):
+                self.stats.backpressures += 1
+            raise
         self._stream_offsets = offsets
         skip = self._offset - sum(offsets)   # global offset not yet mapped
         if skip < 0:

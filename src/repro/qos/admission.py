@@ -19,9 +19,21 @@ an unthrottled heavy client can exhaust both. This module is the gatekeeper:
   a grant beyond the burst capacity returns the modeled wait the caller must
   charge to its clock, which is how pullers report backpressure upstream.
 
+A ``max_streams_total`` cap bounds concurrent streams across *all* clients
+(the reader-map's physical ceiling); freed slots fire ``subscribe_release``
+callbacks so the gateway can re-plan in-flight fan-outs. The quota checks
+route through overridable ``_client_quota`` / ``_total_cap`` hooks — that is
+the seam :mod:`repro.qos.distributed` shards the budget on without forking
+the grant path.
+
 Everything here is duck-typed against the cluster layer (no imports from
 :mod:`repro.cluster`), so the coordinator can hold an admission controller
-without creating an import cycle.
+without creating an import cycle. The duck-typed contract (what the
+coordinator and pullers call): ``acquire_stream(client_id, server_id=)``,
+``release_stream(client_id, server_id=, now_s=)`` and
+``lease_wait_s(now_s, n, server_id=)`` — a custom controller must accept
+the routing keywords even if (like this one) it ignores them; only the
+sharded controller routes on them.
 """
 from __future__ import annotations
 
@@ -45,6 +57,7 @@ class Backpressure(Exception):
 @dataclasses.dataclass
 class AdmissionConfig:
     max_streams_per_client: int | None = None   # None == unlimited
+    max_streams_total: int | None = None        # global cap across clients
     memory_budget_bytes: int | None = None      # None == derive from pool
     lease_rate_per_s: float | None = None       # token refill; None == open
     lease_burst: int = 8                        # bucket capacity (tokens)
@@ -55,9 +68,11 @@ class AdmissionConfig:
 class AdmissionStats:
     stream_grants: int = 0
     stream_denials: int = 0          # quota Backpressure raised
+    total_denials: int = 0           # global-cap Backpressure raised
     memory_denials: int = 0          # budget Backpressure raised
     lease_grants: int = 0            # token-bucket grants (incl. waited)
     throttle_wait_s: float = 0.0     # modeled wait charged by the bucket
+    peak_active: int = 0             # high-water mark of concurrent streams
 
 
 class AdmissionController:
@@ -75,35 +90,92 @@ class AdmissionController:
         self._active: dict[str, int] = {}        # client_id -> open streams
         self._tokens = float(self.config.lease_burst)
         self._bucket_clock_s = 0.0               # modeled time of last refill
+        self._release_cbs: list = []             # freed-slot listeners
 
     # ------------------------------------------------------------- streams
     def active_streams(self, client_id: str = "default") -> int:
         return self._active.get(client_id, 0)
 
-    def acquire_stream(self, client_id: str = "default") -> None:
-        """Grant one concurrent stream to ``client_id`` or raise
-        :class:`Backpressure`. Pairs with :meth:`release_stream`."""
-        quota = self.config.max_streams_per_client
+    def active_total(self) -> int:
+        """Concurrently open streams across every client."""
+        return sum(self._active.values())
+
+    # Overridable limit hooks: the distributed layer's shards re-read these
+    # from their borrow-adjusted local capacities; everything else in the
+    # grant path is shared, so a one-shard deployment is grant-for-grant
+    # identical to this controller (the conformance suite's invariant).
+    def _client_quota(self, client_id: str) -> int | None:
+        return self.config.max_streams_per_client
+
+    def _total_cap(self) -> int | None:
+        return self.config.max_streams_total
+
+    def _deny_reason(self, client_id: str) -> str | None:
+        """Would :meth:`acquire_stream` deny right now? Returns the denial
+        kind (``"quota"`` / ``"total"`` / ``"memory"``) without touching any
+        stats — the distributed layer peeks before deciding to borrow."""
+        quota = self._client_quota(client_id)
         if quota is not None and self.active_streams(client_id) >= quota:
-            self.stats.stream_denials += 1
-            raise Backpressure(
-                f"client {client_id!r} at stream quota ({quota})",
-                self.config.retry_after_hint_s)
+            return "quota"
+        cap = self._total_cap()
+        if cap is not None and self.active_total() >= cap:
+            return "total"
         budget = self.memory_budget_bytes
         if (budget is not None and self.pool is not None
                 and self.pool.stats.bytes_resident > budget):
+            return "memory"
+        return None
+
+    def acquire_stream(self, client_id: str = "default",
+                       server_id: str | None = None) -> None:
+        """Grant one concurrent stream to ``client_id`` or raise
+        :class:`Backpressure`. Pairs with :meth:`release_stream`.
+        ``server_id`` is accepted for interface parity with the sharded
+        controller (which routes the check to that server's shard) and
+        ignored here — one process holds the whole budget.
+
+        The verdict comes from :meth:`_deny_reason` — the ONE place the
+        checks live, so the sharded borrow loop (which peeks the reason
+        before borrowing, then calls this) can never disagree with the
+        grant path."""
+        reason = self._deny_reason(client_id)
+        if reason == "quota":
+            self.stats.stream_denials += 1
+            raise Backpressure(
+                f"client {client_id!r} at stream quota "
+                f"({self._client_quota(client_id)})",
+                self.config.retry_after_hint_s)
+        if reason == "total":
+            self.stats.total_denials += 1
+            raise Backpressure(
+                f"cluster at global stream cap ({self._total_cap()})",
+                self.config.retry_after_hint_s)
+        if reason == "memory":
             self.stats.memory_denials += 1
             raise Backpressure(
                 f"registered-memory budget exhausted "
-                f"({self.pool.stats.bytes_resident} > {budget} bytes)",
+                f"({self.pool.stats.bytes_resident} > "
+                f"{self.memory_budget_bytes} bytes)",
                 self.config.retry_after_hint_s)
         self._active[client_id] = self.active_streams(client_id) + 1
         self.stats.stream_grants += 1
+        self.stats.peak_active = max(self.stats.peak_active,
+                                     self.active_total())
 
-    def release_stream(self, client_id: str = "default") -> None:
+    def subscribe_release(self, callback) -> None:
+        """Register ``callback(server_id, client_id, now_s)`` to fire on
+        every freed stream slot — the signal the gateway's
+        ``replan_on_release`` hook widens in-flight fan-outs on."""
+        self._release_cbs.append(callback)
+
+    def release_stream(self, client_id: str = "default",
+                       server_id: str | None = None,
+                       now_s: float | None = None) -> None:
         n = self.active_streams(client_id)
         if n > 0:
             self._active[client_id] = n - 1
+            for cb in self._release_cbs:
+                cb(server_id, client_id, now_s)
 
     # -------------------------------------------------------------- memory
     @property
@@ -115,21 +187,40 @@ class AdmissionController:
         return None
 
     # --------------------------------------------------------- token bucket
-    def lease_wait_s(self, now_s: float, n: int = 1) -> float:
+    def _refill(self, now_s: float) -> None:
+        """Advance the bucket to ``now_s`` (forward motion only)."""
+        rate = self.config.lease_rate_per_s
+        if rate is None or rate <= 0:
+            return
+        if now_s > self._bucket_clock_s:
+            self._tokens = min(float(self.config.lease_burst),
+                               self._tokens
+                               + (now_s - self._bucket_clock_s) * rate)
+            self._bucket_clock_s = now_s
+
+    def tokens_at(self, now_s: float) -> float:
+        """Tokens the bucket would hold at ``now_s``, without mutating it —
+        the distributed reconciler's conservation bookkeeping reads this."""
+        rate = self.config.lease_rate_per_s
+        if rate is None or rate <= 0 or now_s <= self._bucket_clock_s:
+            return self._tokens
+        return min(float(self.config.lease_burst),
+                   self._tokens + (now_s - self._bucket_clock_s) * rate)
+
+    def lease_wait_s(self, now_s: float, n: int = 1,
+                     server_id: str | None = None) -> float:
         """Grant ``n`` lease tokens at modeled time ``now_s``; return the
         modeled wait before the grant fires (0.0 when the bucket covers it).
 
         Callers charge the wait to their own modeled clock — streams run on
         per-stream clocks, so ``now_s`` may jump backwards between callers;
-        the bucket only refills on forward motion."""
+        the bucket only refills on forward motion. ``server_id`` is for
+        interface parity with the sharded controller (ignored here)."""
         self.stats.lease_grants += n
         rate = self.config.lease_rate_per_s
         if rate is None or rate <= 0:
             return 0.0
-        if now_s > self._bucket_clock_s:
-            self._tokens = min(float(self.config.lease_burst),
-                               self._tokens + (now_s - self._bucket_clock_s) * rate)
-            self._bucket_clock_s = now_s
+        self._refill(now_s)
         if self._tokens >= n:
             self._tokens -= n
             return 0.0

@@ -34,6 +34,17 @@ becomes adaptive:
   remainder re-enters the weighted-fair queue at its residual cost, and the
   scan resumes where it stopped when the virtual clock readmits it.
 
+Admission may be **distributed**: with a
+:class:`~.distributed.ShardedAdmission`, lease tokens are metered against
+each endpoint server's own bucket shard (concurrent grants — the charged
+wait is the slowest shard's), and the gateway auto-subscribes to the
+controller's freed-slot events: :meth:`ScanGateway.replan_on_release`
+records the modeled instant another client's stream closed, and a
+quota-capped in-flight fan-out whose service window covers that instant
+packs its remaining streams onto the widened lane set instead of
+serializing onto the grant-time lanes for its whole service
+(``QosStats.replans`` counts the widenings).
+
 Time is modeled: the gateway runs a deterministic clock that advances by
 each request's modeled service time, so grant latency / shedding / fairness
 comparisons reproduce exactly under any machine load. The coordinator handed
@@ -44,6 +55,7 @@ would double-charge the bucket.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 
 from ..cluster.mempool import BufferPool
 from ..cluster.plan import Endpoint, ScanPlan
@@ -122,17 +134,26 @@ def _copy_batch(batch: RecordBatch) -> RecordBatch:
     return RecordBatch(batch.schema, cols)
 
 
-def _makespan(clock_s: list[float], parallelism: int | None) -> float:
+def _makespan(clock_s: list[float], parallelism: int | None,
+              extra_lanes: tuple[float, ...] = ()) -> float:
     """Modeled completion time of the fan-out under a concurrency cap:
     longest-processing-time greedy assignment of stream clocks onto
-    ``parallelism`` lanes. With no cap this is the plain critical path."""
-    if parallelism is None or parallelism >= len(clock_s):
+    ``parallelism`` lanes. With no cap this is the plain critical path.
+
+    ``extra_lanes`` are lanes that *open mid-service* — freed-slot
+    re-planning (another client's streams closed at that relative offset):
+    each value is a lane whose earliest start is that offset, so the
+    remaining work can widen onto it the moment it frees."""
+    if parallelism is None or (parallelism >= len(clock_s)
+                               and not extra_lanes):
         return max(clock_s, default=0.0)
-    lanes = [0.0] * max(1, parallelism)
+    lanes = [0.0] * max(1, parallelism) + [max(0.0, t) for t in extra_lanes]
+    makespan = 0.0
     for c in sorted(clock_s, reverse=True):
         idx = min(range(len(lanes)), key=lanes.__getitem__)
         lanes[idx] += c
-    return max(lanes)
+        makespan = max(makespan, lanes[idx])
+    return makespan
 
 
 @dataclasses.dataclass
@@ -182,21 +203,104 @@ class ScanGateway:
         self._next_id = 0
         # calibration: WFQ cost units -> modeled seconds, refined as we serve
         self._service_s_per_cost = est_service_s_per_cost
+        # freed-slot events (modeled time, slots) awaiting an in-flight
+        # fan-out to widen onto; fed by replan_on_release
+        self._replan_events: list[tuple[float, int]] = []
+        if admission is not None and hasattr(admission, "subscribe_release"):
+            # subscribe through a weakref: a long-lived controller sees
+            # many gateways come and go, and a strong bound-method
+            # subscription would pin each dead gateway (and its event
+            # list) forever
+            ref = weakref.ref(self)
+
+            def _on_release(server_id=None, client_id=None, now_s=None,
+                            _ref=ref):
+                gateway = _ref()
+                if gateway is not None:
+                    gateway.replan_on_release(server_id, client_id, now_s)
+
+            admission.subscribe_release(_on_release)
 
     # ------------------------------------------------------------- modeling
     def _quota(self) -> int | None:
         return (self.admission.config.max_streams_per_client
                 if self.admission is not None else None)
 
-    def _service_time(self, streams) -> float:
+    def _effective_parallelism(self, held_back: int = 0) -> int | None:
+        """Lanes a fan-out may run on right now: the client's stream quota,
+        further narrowed by what other admission clients currently hold
+        against the global stream cap (``None`` == uncapped). ``held_back``
+        re-adds slots whose freeing lies *ahead* on the modeled clock — the
+        controller's occupancy is wall-clock-current, but a release event
+        stamped mid-service means the slot was still held at grant time."""
+        quota = self._quota()
+        adm = self.admission
+        cap = (getattr(adm.config, "max_streams_total", None)
+               if adm is not None else None)
+        if cap is None:
+            return quota
+        free = max(1, cap - adm.active_total() - held_back)
+        return free if quota is None else min(quota, free)
+
+    def replan_on_release(self, server_id: str | None = None,
+                          client_id: str | None = None,
+                          now_s: float | None = None) -> None:
+        """A stream slot somewhere freed at modeled time ``now_s`` (another
+        client closed a stream, a batch scan parked). Remember it: the next
+        quota-capped fan-out whose service window covers that instant packs
+        its remaining streams onto the widened lane set instead of
+        serializing onto the grant-time lanes for its whole service.
+        Auto-subscribed to the admission controller's freed-slot events
+        when it exposes ``subscribe_release``.
+
+        ``now_s`` must be on THIS gateway's modeled timeline; releases that
+        carry none (e.g. a stream close whose only clock is scan-relative)
+        are stamped with the current gateway clock, which folds them into
+        the next grant's occupancy instead of a mid-service widening —
+        conservative, never wrong."""
+        t = self.clock_s if now_s is None else now_s
+        self._replan_events.append((t, 1))
+
+    def _service_time(self, streams, start_s: float | None = None) -> float:
         """Modeled service of a fan-out: the critical path of absolute
         stream finish times, floored by the quota-lane packing of stream
         *durations*. A stolen stream's ``start_s`` epoch is waiting, not
         work — it bounds the finish time but must not be packed into a
-        lane as if the lane were busy."""
+        lane as if the lane were busy.
+
+        With ``start_s`` (the grant instant), freed-slot events after it
+        open extra lanes mid-service (gateway re-planning): slots released
+        before the grant are already reflected in the occupancy-derived
+        lane count, so they are pruned rather than double-counted."""
         finish = max((s.start_s + s.clock_s for s in streams), default=0.0)
-        return max(finish,
-                   _makespan([s.clock_s for s in streams], self._quota()))
+        durations = [s.clock_s for s in streams]
+        if self._replan_events:
+            # events at or before the service window's start are already
+            # reflected in the controller's occupancy — drop them (the
+            # preemptible path passes no start_s and widens conservatively,
+            # but still drains the backlog against the current clock)
+            cut = self.clock_s if start_s is None else start_s
+            self._replan_events = [e for e in self._replan_events
+                                   if e[0] > cut]
+        if start_s is None or not self._replan_events:
+            return max(finish,
+                       _makespan(durations, self._effective_parallelism()))
+        pending = sorted(self._replan_events)
+        held_back = sum(k for _, k in pending)
+        extra = tuple(t - start_s for t, k in pending for _ in range(k))
+        service = max(finish,
+                      _makespan(durations,
+                                self._effective_parallelism(held_back),
+                                extra))
+        # only events inside the computed window widened this fan-out; a
+        # release stamped beyond it stays queued for the next request
+        # whose window actually covers that instant (_makespan never
+        # assigns work to a lane opening at or past the final makespan,
+        # so dropping those lanes cannot have changed the result)
+        kept = [e for e in pending if e[0] - start_s >= service]
+        self._replan_events = kept
+        self.stats.replans += held_back - sum(k for _, k in kept)
+        return service
 
     # ---------------------------------------------------------- sched hooks
     @property
@@ -310,7 +414,9 @@ class ScanGateway:
             self.results[request.request_id] = result
         self.stats.makespan_s = self.clock_s
         if self.admission is not None:
-            self.stats.throttle_wait_s = self.admission.stats.throttle_wait_s
+            admission_stats = self.admission.stats
+            self.stats.throttle_wait_s = admission_stats.throttle_wait_s
+            self.stats.admission = admission_stats   # per-shard when sharded
         return granted
 
     def result(self, request_id: int) -> ScanResult | None:
@@ -349,12 +455,26 @@ class ScanGateway:
                                      num_streams=num_streams)
         return self._apply_start(plan, request.start_batch)
 
+    def _charge_leases(self, plan: ScanPlan) -> float:
+        """Token-bucket wait for one lease per stream the fan-out opens.
+        A sharded controller meters each endpoint against its own server's
+        bucket (``lease_wait_for_counts``); the per-shard grants run
+        concurrently, so the charged wait is the slowest shard's (two
+        endpoints on one shard still serialize on that shard's bucket)."""
+        adm = self.admission
+        sharded = getattr(adm, "lease_wait_for_counts", None)
+        if sharded is not None:
+            counts: dict[str, int] = {}
+            for ep in plan.endpoints:
+                counts[ep.server_id] = counts.get(ep.server_id, 0) + 1
+            return sharded(self.clock_s, counts)
+        return adm.lease_wait_s(self.clock_s, len(plan.endpoints))
+
     def _execute(self, request: ScanRequest) -> ScanResult | None:
         plan, trim = self._plan(request)
         if self.admission is not None:
             # one lease token per stream the fan-out opens
-            self.clock_s += self.admission.lease_wait_s(
-                self.clock_s, len(plan.endpoints))
+            self.clock_s += self._charge_leases(plan)
         grant_latency = self.clock_s - request.arrival_s
         puller = self._make_puller(plan, request.client_id)
         preempt = self._preempt
@@ -371,8 +491,9 @@ class ScanGateway:
             per_stream[idx].append(
                 _copy_batch(batch) if self.pool is not None else batch)
 
+        grant_clock_s = self.clock_s
         cluster = puller.run(sink)
-        service = self._service_time(cluster.streams)
+        service = self._service_time(cluster.streams, start_s=grant_clock_s)
         self.clock_s += service
         endpoints = tuple(p.endpoint for p in puller.pullers)
         batches = reassemble(plan, per_stream, endpoints)[trim:]

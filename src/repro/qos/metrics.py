@@ -67,7 +67,13 @@ class QosStats:
     queue_depth_max: int = 0
     throttle_wait_s: float = 0.0        # token-bucket wait (admission)
     makespan_s: float = 0.0             # gateway clock when the queue drained
+    replans: int = 0                    # freed-slot events that widened a
+    #                                     quota-capped in-flight fan-out
     cluster: list["ClusterStats"] = dataclasses.field(default_factory=list)
+    # admission snapshot (duck-typed: AdmissionStats, or the sharded
+    # DistributedStats whose .shards dict carries per-shard grant/denial/
+    # borrow/reconcile counters — utils/report.admission_table renders it)
+    admission: object = None
 
     def klass(self, name: str) -> ClassStats:
         if name not in self.classes:
@@ -119,6 +125,14 @@ class QosStats:
             parts.append(f"steals={self.steals} "
                          f"ticket_hits={self.ticket_hits} "
                          f"preempt={self.preemptions}")
+        if self.replans:
+            parts.append(f"replans={self.replans}")
+        shards = getattr(self.admission, "shards", None)
+        if shards:
+            agg = self.admission
+            parts.append(f"shards={len(shards)} borrows={agg.borrows} "
+                         f"reconciles={agg.reconciles} "
+                         f"peak={agg.peak_total}")
         for name in sorted(self.classes):
             c = self.classes[name]
             parts.append(

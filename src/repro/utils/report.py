@@ -137,6 +137,41 @@ def sched_table(qos) -> str:
     return "\n".join(rows)
 
 
+def admission_table(stats) -> str:
+    """Per-shard markdown table for a ``repro.qos.DistributedStats`` —
+    grant/denial/borrow/reconcile counters plus the token-bucket traffic —
+    with the cluster-wide aggregate in a footer row. Also accepts a plain
+    ``AdmissionStats`` (centralized controller): one ``*global*`` row.
+    Duck-typed like its siblings so this module stays dependency-free."""
+    rows = ["| shard | grants | denials (quota/total/mem) | borrows | "
+            "lends | reconciles | tokens in/out | throttle ms | peak |",
+            "|---|---|---|---|---|---|---|---|---|"]
+
+    def denials(s) -> str:
+        return (f"{s.stream_denials}/{s.total_denials}/{s.memory_denials}")
+
+    shards = getattr(stats, "shards", None)
+    if not shards:
+        rows.append(
+            f"| *global* | {stats.stream_grants} | {denials(stats)} | — | — "
+            f"| — | — | {stats.throttle_wait_s * 1e3:.3f} | "
+            f"{stats.peak_active} |")
+        return "\n".join(rows)
+    for sid in sorted(shards):
+        s = shards[sid]
+        rows.append(
+            f"| {sid} | {s.stream_grants} | {denials(s)} | {s.borrows} | "
+            f"{s.lends} | {s.reconciles} | "
+            f"{s.tokens_in:.1f}/{s.tokens_out:.1f} | "
+            f"{s.throttle_wait_s * 1e3:.3f} | {s.peak_active} |")
+    rows.append(
+        f"| *cluster* | {stats.stream_grants} | {denials(stats)} | "
+        f"{stats.borrows} | {stats.lends} | {stats.reconciles} | "
+        f"moved={stats.tokens_rebalanced:.1f} | "
+        f"{stats.throttle_wait_s * 1e3:.3f} | {stats.peak_total} |")
+    return "\n".join(rows)
+
+
 def summary_stats(arts: list[dict]) -> dict:
     ok = sum(1 for a in arts if a["status"] == "ok")
     skip = sum(1 for a in arts if a["status"] == "skipped")

@@ -7,7 +7,93 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+from repro.cluster import ClusterCoordinator
+from repro.core import Fabric, FabricConfig, ThallusClient, ThallusServer
+from repro.engine import Engine, make_numeric_table
+
 
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+# ----------------------------------------------------- shared cluster setup
+# The qos/sched/cluster suites all stand up the same fixture: a numeric
+# table dealt across N ThallusServers (optionally with one slowed-down
+# fabric), a single-server reference scan, and token shards for the loader.
+# One definition here; the suites parameterize rows/batch sizes.
+
+def make_coordinator(num_servers: int, placement: str = "shard",
+                     table=None, rows: int = 40_000, ncols: int = 4,
+                     batch_rows: int = 4096, dataset: str = "/d",
+                     admission=None, slow: int | None = None,
+                     slowdown: float = 4.0, slowdown_all: float = 1.0,
+                     server_cls=ThallusServer) -> ClusterCoordinator:
+    """A seeded N-server cluster: ``table`` (or a fresh numeric one) placed
+    as shards or replicas, with server ``slow``'s fabric ``slowdown``×
+    slower (the straggler fixture) and an optional admission controller.
+    ``slowdown_all`` slows every fabric uniformly — tests asserting modeled
+    makespan ratios use it so modeled wire time dwarfs measured noise."""
+    if table is None:
+        table = make_numeric_table("t", rows, ncols, batch_rows=batch_rows)
+    coord = ClusterCoordinator(admission=admission)
+    for i in range(num_servers):
+        factor = slowdown_all * (slowdown if slow == i else 1.0)
+        cfg = FabricConfig()
+        if factor != 1.0:
+            cfg = FabricConfig(rpc_bw=cfg.rpc_bw / factor,
+                               rdma_bw=cfg.rdma_bw / factor)
+        coord.add_server(f"s{i}", server_cls(Engine(), Fabric(cfg)))
+    if placement == "shard":
+        coord.place_shards(dataset, table)
+    else:
+        coord.place_replicas(dataset, table)
+    return coord
+
+
+def reference_batches(sql: str, table=None, rows: int = 40_000,
+                      ncols: int = 4, batch_rows: int = 4096,
+                      dataset: str = "/d"):
+    """The single-server, single-stream scan every parity test compares
+    against (same seeded table as :func:`make_coordinator`)."""
+    if table is None:
+        table = make_numeric_table("t", rows, ncols, batch_rows=batch_rows)
+    eng = Engine()
+    eng.register(dataset, table)
+    return ThallusClient(ThallusServer(eng, Fabric())).run_query(sql, dataset)
+
+
+def token_servers(n: int, num_seqs: int = 96, seq_len: int = 32,
+                  vocab_size: int = 128, seqs_per_batch: int = 16,
+                  dataset: str = "/d") -> list[ThallusServer]:
+    """N replica servers over one token table — the loader suites' shape."""
+    from repro.data import make_token_table
+    table = make_token_table("tok", num_seqs=num_seqs, seq_len=seq_len,
+                             vocab_size=vocab_size,
+                             seqs_per_batch=seqs_per_batch)
+    servers = []
+    for _ in range(n):
+        eng = Engine()
+        eng.register(dataset, table)
+        servers.append(ThallusServer(eng, Fabric()))
+    return servers
+
+
+class ModeledClock:
+    """A tiny monotonic modeled clock for admission/reconcile tests: the
+    qos layer runs on caller-supplied modeled times, so tests drive one
+    explicitly instead of scattering float literals."""
+
+    def __init__(self, start_s: float = 0.0):
+        self.now_s = start_s
+
+    def advance(self, dt_s: float) -> float:
+        if dt_s < 0:
+            raise ValueError("modeled time only moves forward")
+        self.now_s += dt_s
+        return self.now_s
+
+
+@pytest.fixture
+def modeled_clock():
+    return ModeledClock()

@@ -3,11 +3,12 @@ partitioning, the registered buffer pool, multi-stream pulls, and per-stream
 fault recovery."""
 import numpy as np
 import pytest
+from conftest import make_coordinator, reference_batches, token_servers
 
 from repro.cluster import (BufferPool, ClusterCoordinator, MultiStreamPuller,
                            cluster_scan, plan_scan, size_class)
-from repro.core import Fabric, ThallusClient, ThallusServer, expose_batch
-from repro.data import ThallusLoader, make_token_table
+from repro.core import Fabric, ThallusServer, expose_batch
+from repro.data import ThallusLoader
 from repro.engine import Engine, make_numeric_table
 
 ROWS = 40_000
@@ -16,15 +17,7 @@ SQL = "SELECT c0, c1 FROM t"
 
 def make_cluster(num_servers: int, placement: str = "shard",
                  server_cls=ThallusServer) -> ClusterCoordinator:
-    table = make_numeric_table("t", ROWS, 4, batch_rows=4096)
-    coord = ClusterCoordinator()
-    for i in range(num_servers):
-        coord.add_server(f"s{i}", server_cls(Engine(), Fabric()))
-    if placement == "shard":
-        coord.place_shards("/d", table)
-    else:
-        coord.place_replicas("/d", table)
-    return coord
+    return make_coordinator(num_servers, placement, server_cls=server_cls)
 
 
 # ---------------------------------------------------------------- planner
@@ -69,10 +62,7 @@ def test_plan_shard_rejects_fewer_streams_than_shards():
 
 
 def _reference_rows() -> np.ndarray:
-    eng = Engine()
-    eng.register("/d", make_numeric_table("t", ROWS, 4, batch_rows=4096))
-    client = ThallusClient(ThallusServer(eng, Fabric()))
-    batches = client.run_query(SQL, "/d")
+    batches = reference_batches(SQL)
     return np.sort(np.concatenate([b.column("c0").values for b in batches]))
 
 
@@ -266,14 +256,7 @@ def test_stream_failure_exhausts_resumes():
 
 
 def _token_servers(n):
-    table = make_token_table("tok", num_seqs=96, seq_len=32, vocab_size=128,
-                             seqs_per_batch=16)
-    servers = []
-    for _ in range(n):
-        eng = Engine()
-        eng.register("/d", table)
-        servers.append(ThallusServer(eng, Fabric()))
-    return servers
+    return token_servers(n)
 
 
 def test_loader_cluster_mode_parity():

@@ -143,6 +143,80 @@ def test_multicast_subscribers_byte_identical(num_servers, placement,
     assert shared == num_subscribers - 1     # exactly one fan-out ran
 
 
+@st.composite
+def admission_traces(draw):
+    """Random interleavings of acquires, releases, leases and reconciles
+    across 2-5 shards and a small client pool, at non-decreasing modeled
+    times. Borrows are implicit: any acquire routed to a saturated shard
+    exercises the borrow path."""
+    num_shards = draw(st.integers(2, 5))
+    num_clients = draw(st.integers(1, 3))
+    quota = draw(st.integers(1, 6))
+    cap = draw(st.one_of(st.none(), st.integers(2, 10)))
+    rate = draw(st.floats(10.0, 1000.0))
+    burst = draw(st.integers(num_shards, 4 * num_shards))
+    ops, now_s = [], 0.0
+    for _ in range(draw(st.integers(5, 60))):
+        now_s += draw(st.floats(0.0, 20e-3))
+        kind = draw(st.sampled_from(
+            ["acquire", "acquire", "acquire", "release", "lease",
+             "reconcile"]))
+        client = f"c{draw(st.integers(0, num_clients - 1))}"
+        server = f"s{draw(st.integers(0, num_shards - 1))}"
+        ops.append((kind, client, server, now_s,
+                    draw(st.integers(1, 3))))
+    return num_shards, quota, cap, rate, burst, ops
+
+
+@settings(max_examples=60, deadline=None)
+@given(admission_traces())
+def test_sharded_admission_invariants(trace):
+    """repro.qos.distributed invariants under random interleavings of
+    acquires, releases, borrows and reconciles across 2-5 shards:
+    (a) concurrently granted streams never exceed the global quota (per
+    client) or the global cap (cluster-wide), (b) lease tokens are conserved
+    across rebalances — no shard pair creates or destroys tokens — and
+    (c) every Backpressure carries a positive ``retry_after_s``."""
+    from repro.qos import (AdmissionConfig, Backpressure, ShardedAdmission)
+
+    num_shards, quota, cap, rate, burst, ops = trace
+    sharded = ShardedAdmission(
+        AdmissionConfig(max_streams_per_client=quota, max_streams_total=cap,
+                        lease_rate_per_s=rate, lease_burst=burst),
+        [f"s{i}" for i in range(num_shards)])
+    held: dict[tuple[str, str], int] = {}
+    for kind, client, server, now_s, n in ops:
+        if kind == "acquire":
+            try:
+                sharded.acquire_stream(client, server_id=server)
+                held[(client, server)] = held.get((client, server), 0) + 1
+            except Backpressure as e:
+                assert e.retry_after_s > 0                      # (c)
+        elif kind == "release":
+            if held.get((client, server), 0) > 0:
+                held[(client, server)] -= 1
+                sharded.release_stream(client, server_id=server,
+                                       now_s=now_s)
+        elif kind == "lease":
+            assert sharded.lease_wait_s(now_s, n, server_id=server) >= 0.0
+        else:
+            report = sharded.reconcile(now_s)
+            assert report.tokens_after == \
+                pytest.approx(report.tokens_before)             # (b)
+        for c in {c for c, _ in held}:
+            assert sharded.active_streams(c) <= quota           # (a)
+        if cap is not None:
+            assert sharded.active_total() <= cap                # (a)
+    # the ledger matches the model's bookkeeping exactly
+    for c in {c for c, _ in held}:
+        assert sharded.active_streams(c) == \
+            sum(v for (cc, _), v in held.items() if cc == c)
+    # and tokens never exceed the global burst, however they were shuffled
+    last = max((op[3] for op in ops), default=0.0)
+    total = sum(s.tokens_at(last) for s in sharded.shards.values())
+    assert total <= burst + 1e-9
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.floats(-2.0, 2.0), st.integers(1, 4))
 def test_engine_filter_conservation(threshold, ncols):

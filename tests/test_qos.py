@@ -4,38 +4,27 @@ propagation through the loader, pool memory budget, and lease-RPC prefetch
 pipelining in the streams underneath."""
 import numpy as np
 import pytest
+from conftest import make_coordinator, reference_batches, token_servers
 
-from repro.cluster import (BufferPool, ClusterCoordinator, MultiStreamPuller,
-                           cluster_scan)
-from repro.core import Fabric, ThallusClient, ThallusServer, expose_batch
+from repro.cluster import BufferPool, ClusterCoordinator, cluster_scan
+from repro.core import Fabric, ThallusServer, expose_batch
 from repro.data import ThallusLoader, make_token_table
 from repro.engine import Engine, make_numeric_table
 from repro.qos import (AdmissionConfig, AdmissionController, Backpressure,
                        ClientClass, FifoQueue, ScanGateway, ScanRequest,
                        WeightedFairQueue)
 
-ROWS = 40_000
 SQL = "SELECT c0, c1 FROM t"
 HEAVY_SQL = "SELECT c0, c1, c2, c3 FROM t"
 
 
 def make_cluster(num_servers: int, placement: str = "shard",
                  admission=None) -> ClusterCoordinator:
-    table = make_numeric_table("t", ROWS, 4, batch_rows=4096)
-    coord = ClusterCoordinator(admission=admission)
-    for i in range(num_servers):
-        coord.add_server(f"s{i}", ThallusServer(Engine(), Fabric()))
-    if placement == "shard":
-        coord.place_shards("/d", table)
-    else:
-        coord.place_replicas("/d", table)
-    return coord
+    return make_coordinator(num_servers, placement, admission=admission)
 
 
 def _reference_batches(sql=SQL):
-    eng = Engine()
-    eng.register("/d", make_numeric_table("t", ROWS, 4, batch_rows=4096))
-    return ThallusClient(ThallusServer(eng, Fabric())).run_query(sql, "/d")
+    return reference_batches(sql)
 
 
 # ------------------------------------------------------------- admission
@@ -264,14 +253,7 @@ def test_gateway_quota_caps_replica_fanout():
 
 
 def _token_servers(n):
-    table = make_token_table("tok", num_seqs=96, seq_len=32, vocab_size=128,
-                             seqs_per_batch=16)
-    servers = []
-    for _ in range(n):
-        eng = Engine()
-        eng.register("/d", table)
-        servers.append(ThallusServer(eng, Fabric()))
-    return servers
+    return token_servers(n)
 
 
 def test_loader_surfaces_backpressure_retry_after():

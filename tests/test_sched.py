@@ -6,9 +6,10 @@ budget), plus their integration through the qos gateway, the loader, the
 batcher, and the report tables."""
 import numpy as np
 import pytest
+from conftest import make_coordinator, reference_batches
 
 from repro.cluster import ClusterCoordinator, MultiStreamPuller
-from repro.core import Fabric, FabricConfig, ThallusClient, ThallusServer
+from repro.core import Fabric, ThallusServer
 from repro.data import ThallusLoader, make_token_table
 from repro.engine import Engine, make_numeric_table
 from repro.qos import (AdmissionConfig, AdmissionController, ClientClass,
@@ -25,24 +26,12 @@ TABLE = make_numeric_table("t", ROWS, 4, batch_rows=BATCH_ROWS)
 
 def make_cluster(n, placement="shard", slow=None, slowdown=4.0,
                  admission=None):
-    coord = ClusterCoordinator(admission=admission)
-    for i in range(n):
-        cfg = FabricConfig()
-        if slow is not None and i == slow:
-            cfg = FabricConfig(rpc_bw=cfg.rpc_bw / slowdown,
-                               rdma_bw=cfg.rdma_bw / slowdown)
-        coord.add_server(f"s{i}", ThallusServer(Engine(), Fabric(cfg)))
-    if placement == "shard":
-        coord.place_shards("/d", TABLE)
-    else:
-        coord.place_replicas("/d", TABLE)
-    return coord
+    return make_coordinator(n, placement, table=TABLE, admission=admission,
+                            slow=slow, slowdown=slowdown)
 
 
 def _reference_batches(sql=SQL):
-    eng = Engine()
-    eng.register("/d", TABLE)
-    return ThallusClient(ThallusServer(eng, Fabric())).run_query(sql, "/d")
+    return reference_batches(sql, table=TABLE)
 
 
 def _assert_batches_equal(got, ref):

@@ -36,6 +36,13 @@ checks:
   centralized controller's, the 1-shard run matches it (drop-in), and a
   seeded acquire/release storm with borrowing + reconciles never admits
   past the global per-client quota or cluster-wide cap.
+* ``--scenario flap`` — steal hysteresis vs the static threshold under a
+  flapping replica (RDMA rate oscillating 4×↔1× every lease round) and a
+  straggler that degrades persistently across two scans. Asserts
+  history-aware stealing beats no-history by ≥ 1.3× on the repeat
+  straggler's scan-2 modeled makespan with ≤ 1 wasted steal, and that a
+  thief whose admission shard is at its local quota declines the stolen
+  range (never over-admits) until a freed-slot event reopens the shard.
 
 Runnable standalone::
 
@@ -55,13 +62,14 @@ else:
 
 from repro.cluster import (BufferPool, ClusterCoordinator, MultiStreamPuller,
                            cluster_scan)
-from repro.core import (Fabric, FabricConfig, RpcClient, ThallusClient,
-                        ThallusServer)
+from repro.core import (Fabric, FabricConfig, FlappingFabric, RpcClient,
+                        ThallusClient, ThallusServer)
 from repro.engine import Engine, make_numeric_table
 from repro.qos import (AdmissionConfig, AdmissionController, Backpressure,
-                       ClientClass, ScanGateway, ScanRequest,
-                       ShardedAdmission)
-from repro.sched import AdaptiveScheduler, StealConfig, TicketTable
+                       ClientClass, DistributedConfig, ScanGateway,
+                       ScanRequest, ShardedAdmission)
+from repro.sched import (AdaptiveScheduler, RateHistory, StealConfig,
+                         StealingPuller, TicketTable)
 
 TOTAL_COLS = 8
 CLUSTER_ROWS = 1 << 20
@@ -402,12 +410,138 @@ def run_admission() -> list[Row]:
     return rows
 
 
+def run_flap() -> list[Row]:
+    """History-aware vs no-history stealing under a flapping replica,
+    self-asserting three ways.
+
+    The shape: a 5-replica cluster scanned on 3 streams, so two replicas sit
+    idle as steal targets from t=0 — one clean, one **flapping** (RDMA rate
+    oscillating 4×↔1× every lease round). The leased straggler degrades
+    persistently across two scans (4× in scan 1, 2.1× in scan 2 — under the
+    static 2× threshold). Assertions:
+
+    1. *Hysteresis*: with a shared :class:`RateHistory`, scan 1's steal
+       lowers the straggler's per-victim factor, so scan 2 steals where the
+       static threshold stays blind — and the flap quarantine keeps the
+       tail off the oscillating replica. History-aware stealing must beat
+       no-history by ≥ 1.3× modeled makespan on scan 2.
+    2. *Waste*: the history-aware run may waste at most 1 steal across both
+       scans (wasted = a steal from/onto the flapping replica, or a
+       re-steal — a migration that had to be undone).
+    3. *Shard safety*: rerun the straggler under per-server
+       ``ShardedAdmission`` with every candidate thief's shard at its local
+       quota: the thief must **decline** (never borrow/over-admit), take
+       the next shard only when a freed-slot event opens it, and no shard's
+       concurrent streams may ever exceed its local slice.
+
+    Unlike the throughput axes this scenario runs on the FIXED paper-class
+    ``FabricConfig`` rather than the host-calibrated one: every assertion
+    here is about modeled *decision geometry* (steal split sizes, how many
+    pulls a stolen tail makes on the flapping link), and host-calibrated
+    bandwidth would move those integer splits between runs.
+    """
+    base = FabricConfig()
+    FLAP_SCHEDULE = (4.0, 1.0)
+    STRAGGLER, FLAPPER = "s2", "s3"
+    table = make_numeric_table("t", 24 * (1 << 13), 4, batch_rows=1 << 13)
+    sql = "SELECT c0, c1 FROM t"
+
+    def make_coord(straggler_factor: float,
+                   admission=None) -> ClusterCoordinator:
+        coord = ClusterCoordinator(admission=admission)
+        for sid in ("s0", "s1", "s4"):
+            coord.add_server(sid, ThallusServer(Engine(), Fabric(base)))
+        coord.add_server(STRAGGLER, ThallusServer(
+            Engine(), FlappingFabric(base, schedule=[straggler_factor])))
+        coord.add_server(FLAPPER, ThallusServer(
+            Engine(), FlappingFabric(base, schedule=FLAP_SCHEDULE)))
+        coord.place_replicas("/d", table)
+        return coord
+
+    def wasted(events) -> int:
+        return sum(1 for e in events
+                   if (e.kind == "re_steal"
+                       or (e.kind == "steal"
+                           and FLAPPER in (e.victim, e.thief))))
+
+    rows: list[Row] = []
+    span: dict[tuple[str, int], float] = {}
+    waste: dict[str, int] = {}
+    for label, history in (("nohist", None),
+                           ("hist", RateHistory(quarantine_rounds=64))):
+        waste[label] = 0
+        for scan, factor in ((1, 4.0), (2, 2.1)):
+            coord = make_coord(factor)
+            puller = StealingPuller(coord,
+                                    coord.plan(sql, "/d", num_streams=3),
+                                    steal=StealConfig(), history=history)
+            stats = puller.run()
+            span[(label, scan)] = stats.modeled_critical_path_s
+            waste[label] += wasted(stats.steal_events)
+            rows.append(Row(
+                f"flap_{label}_scan{scan}",
+                stats.modeled_critical_path_s * 1e6,
+                f"straggler={factor:g}x flap={FLAP_SCHEDULE[0]:g}x<->"
+                f"{FLAP_SCHEDULE[1]:g}x steals={stats.steals} "
+                f"re_steals={stats.re_steals} "
+                f"wasted={wasted(stats.steal_events)}"))
+        if history is not None:
+            assert history.total_flaps > 0 and history.quarantined(FLAPPER), \
+                "the flapping replica was never caught flapping"
+    speedup = span[("nohist", 2)] / span[("hist", 2)]
+    rows.append(Row("flap_speedup", speedup,
+                    "scan-2 modeled makespan, history off/on; want >= 1.3"))
+    assert speedup >= 1.3, (
+        f"steal hysteresis recovered only {speedup:.2f}x of the repeat "
+        f"straggler's scan-2 makespan (acceptance floor: 1.3x)")
+    assert waste["hist"] <= 1, (
+        f"history-aware stealing wasted {waste['hist']} steals on the "
+        f"flapping replica (acceptance ceiling: 1)")
+
+    # ---- shard safety: every candidate thief shard at its local quota
+    ids = ["s0", "s1", "s2", "s3", "s4"]
+    admission = ShardedAdmission(
+        AdmissionConfig(max_streams_total=2 * len(ids)), ids,
+        dist=DistributedConfig(borrow_limit=0))
+    coord = make_coord(4.0, admission=admission)
+    puller = StealingPuller(coord, coord.plan(sql, "/d", num_streams=3),
+                            steal=StealConfig(steal_headroom_min=2),
+                            history=RateHistory(), client_id="bench")
+    for sid in ids:          # a foreign tenant fills every second slot
+        admission.acquire_stream("foreign", server_id=sid)
+    released, delivered = False, 0
+    for _, _ in puller.batches():
+        delivered += 1
+        stats = puller.stats()
+        if stats.declines >= 2 and not released:
+            released = True   # one shard drains: the declined steal retries
+            admission.release_stream("foreign", server_id="s4")
+    stats = puller.stats()
+    slices = {sid: shard.config.max_streams_total
+              for sid, shard in admission.shards.items()}
+    over = {sid: shard.stats.peak_active
+            for sid, shard in admission.shards.items()
+            if shard.stats.peak_active > slices[sid]}
+    rows.append(Row("flap_shard_declines", stats.declines,
+                    f"steals={stats.steals} retried={int(released)} "
+                    f"peaks<=slices={not over} batches={stats.batches}"))
+    assert stats.declines >= 1, "no thief shard ever declined"
+    assert released and stats.steals >= 1, (
+        "the declined steal never retried on the freed-slot event")
+    assert not over, (
+        f"a thief shard over-admitted a stolen range: {over} (slices "
+        f"{slices})")
+    assert delivered == 24, f"dropped batches: {delivered}/24"
+    return rows
+
+
 _SCENARIOS = {"fig2": lambda transport: run(transport),
               "cluster": lambda transport: run_cluster(),
               "contention": lambda transport: run_contention(),
               "straggler": lambda transport: run_straggler(),
               "sharing": lambda transport: run_sharing(),
-              "admission": lambda transport: run_admission()}
+              "admission": lambda transport: run_admission(),
+              "flap": lambda transport: run_flap()}
 
 
 def main() -> None:
@@ -427,7 +561,7 @@ def main() -> None:
     elif args.scenario == "all":
         # fig2 already appends cluster
         scenarios = ["fig2", "contention", "straggler", "sharing",
-                     "admission"]
+                     "admission", "flap"]
     elif args.scenario is not None:
         scenarios = [args.scenario]
     else:

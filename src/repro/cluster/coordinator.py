@@ -131,6 +131,25 @@ class ClusterCoordinator:
                                               server_id=endpoint.server_id)
             raise
 
+    def admission_headroom(self, server_id: str,
+                           client_id: str = "default") -> int | None:
+        """Free admission capacity at ``server_id``'s quota shard for one
+        more of ``client_id``'s streams, or ``None`` when unlimited/unknown.
+
+        The steal scheduler's thief-side check: before re-leasing a stolen
+        range onto a server, it asks whether that server's shard could admit
+        the extra stream *locally* — a shard at its quota would stall the
+        thief on admission (or force a borrow), trading a transport stall
+        for an admission stall. Duck-typed like every admission touchpoint:
+        controllers without a ``headroom`` query report ``None`` (no
+        opinion), so plain deployments steal exactly as before."""
+        if self.admission is None:
+            return None
+        headroom = getattr(self.admission, "headroom", None)
+        if headroom is None:
+            return None
+        return headroom(server_id, client_id)
+
     def resume_stream(self, endpoint: Endpoint, delivered: int) -> ScanHandle:
         """Restart one failed stream where it died: a fresh ``init_scan``
         fast-forwarded past the batches the stream already delivered. The

@@ -87,7 +87,42 @@ class ClusterStats:
 
     @property
     def steals(self) -> int:
-        return len(self.steal_events)
+        """Ranges moved to an idle replica. Events are kind-tagged
+        (``steal`` / ``decline`` / ``re_steal``, see
+        ``repro.sched.StealEvent``); an untagged event is a steal."""
+        return sum(1 for e in self.steal_events
+                   if getattr(e, "kind", "steal") == "steal")
+
+    @property
+    def declines(self) -> int:
+        """Steals refused because the thief's admission shard was full."""
+        return sum(1 for e in self.steal_events
+                   if getattr(e, "kind", "steal") == "decline")
+
+    @property
+    def re_steals(self) -> int:
+        """Tails reclaimed by their original victim from a degraded thief."""
+        return sum(1 for e in self.steal_events
+                   if getattr(e, "kind", "steal") == "re_steal")
+
+    def steal_attribution(self) -> dict:
+        """Per-shard decision counts: ``server_id -> {kind: count,
+        "batches": moved}`` (``batches`` counts ranges that actually moved —
+        steals and re-steals; declines moved nothing). Every event carries
+        the shard it landed on (``StealEvent.server_id`` — the thief's
+        shard for a steal, the refusing shard for a decline, the reclaiming
+        shard for a re-steal); events recorded before the field existed are
+        backfilled from their ``thief``, so old traces still attribute.
+        ``utils/report.steal_table`` renders this."""
+        out: dict = {}
+        for e in self.steal_events:
+            sid = getattr(e, "server_id", "") or getattr(e, "thief", "?")
+            kind = getattr(e, "kind", "steal")
+            per = out.setdefault(sid, {"batches": 0})
+            per[kind] = per.get(kind, 0) + 1
+            if kind != "decline":
+                per["batches"] += e.num_batches
+        return out
 
     @property
     def parks(self) -> int:

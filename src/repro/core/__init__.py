@@ -9,7 +9,9 @@ from .bulk import (  # noqa: F401
     size_vectors,
 )
 from .serialize import pack, unpack, serialized_size  # noqa: F401
-from .fabric import Fabric, FabricConfig, WireStats  # noqa: F401
+from .fabric import (  # noqa: F401
+    Fabric, FabricConfig, FlappingFabric, WireStats,
+)
 from .transport import (  # noqa: F401
     RpcTransport, ThallusTransport, Transport, TransportStats, make_transport,
     rdma_pull_batch,

@@ -148,3 +148,38 @@ class Fabric:
         self.rpc_count = self.rdma_count = 0
         self.bytes_over_rpc = self.bytes_over_rdma = 0
         self.registrations = 0
+
+
+class FlappingFabric(Fabric):
+    """A fabric whose RDMA link speed follows a per-pull slowdown schedule.
+
+    The chaos/bench harness for time-varying replicas: each ``rdma_pull``
+    consumes the next factor from ``schedule`` (cycling once exhausted) and
+    models the wire at ``base_bw / factor`` for that pull only — a schedule
+    of ``[4, 1]`` is a link oscillating 4×-slow ↔ full-speed every pull, a
+    ramp ``[1, 2, 4, 8]`` is a degrading thief. Only the modeled RDMA data
+    path flaps (the signal the steal scheduler's rate history watches);
+    control RPCs stay at the base config. Swap ``schedule`` between scans to
+    model persistent degradation (the repeat-straggler case)."""
+
+    def __init__(self, config: FabricConfig | None = None,
+                 schedule: Sequence[float] = (1.0,)):
+        super().__init__(config)
+        if not schedule or any(f <= 0 for f in schedule):
+            raise ValueError("schedule must be non-empty positive factors")
+        self.schedule = list(schedule)
+        self.pulls = 0
+
+    def rdma_pull(self, src: Sequence[np.ndarray],
+                  dst: Sequence[np.ndarray],
+                  registered: bool = False) -> WireStats:
+        base = self.config
+        factor = self.schedule[self.pulls % len(self.schedule)]
+        self.pulls += 1
+        if factor != 1.0:
+            self.config = dataclasses.replace(base,
+                                              rdma_bw=base.rdma_bw / factor)
+        try:
+            return super().rdma_pull(src, dst, registered=registered)
+        finally:
+            self.config = base

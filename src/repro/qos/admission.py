@@ -126,6 +126,23 @@ class AdmissionController:
             return "memory"
         return None
 
+    def headroom(self, server_id: str | None = None,
+                 client_id: str = "default") -> int | None:
+        """Streams this controller could still grant ``client_id`` right
+        now, or ``None`` when unlimited. ``server_id`` is interface parity
+        with the sharded controller (which answers for that server's shard
+        alone); a centralized budget has one answer for every server. The
+        steal scheduler's thief-side check reads this through
+        :meth:`ClusterCoordinator.admission_headroom`."""
+        slacks = []
+        quota = self._client_quota(client_id)
+        if quota is not None:
+            slacks.append(quota - self.active_streams(client_id))
+        cap = self._total_cap()
+        if cap is not None:
+            slacks.append(cap - self.active_total())
+        return min(slacks) if slacks else None
+
     def acquire_stream(self, client_id: str = "default",
                        server_id: str | None = None) -> None:
         """Grant one concurrent stream to ``client_id`` or raise
@@ -167,6 +184,16 @@ class AdmissionController:
         every freed stream slot — the signal the gateway's
         ``replan_on_release`` hook widens in-flight fan-outs on."""
         self._release_cbs.append(callback)
+
+    def unsubscribe_release(self, callback) -> None:
+        """Remove a freed-slot listener. Short-lived subscribers (one scan's
+        steal scheduler) MUST unsubscribe when done — a long-lived
+        controller outlives thousands of them, and the listener list is
+        walked on every release."""
+        try:
+            self._release_cbs.remove(callback)
+        except ValueError:
+            pass                       # already removed: idempotent
 
     def release_stream(self, client_id: str = "default",
                        server_id: str | None = None,

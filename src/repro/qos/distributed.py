@@ -231,6 +231,21 @@ class ShardedAdmission:
         return max(holding, key=lambda kv: (kv[1].active_streams(client_id),
                                             kv[0]))[1]
 
+    def headroom(self, server_id: str,
+                 client_id: str = "default") -> int | None:
+        """The shard's **local** free capacity for one more of
+        ``client_id``'s streams: the tighter of its per-client quota slack
+        and its total-cap slack (``None`` == both unlimited). Deliberately
+        blind to borrowable peer slack — the caller (the steal scheduler's
+        thief-side check, via ``ClusterCoordinator.admission_headroom``)
+        wants to know whether an extra grant would stall on admission or
+        force a borrow, and a borrow is exactly the stall it is avoiding.
+        Unknown servers answer from the shard an acquire would route to."""
+        shard = self._route_acquire(client_id, server_id)
+        slacks = [s for s in (shard.client_slack(client_id),
+                              shard.total_slack()) if s is not None]
+        return min(slacks) if slacks else None
+
     # ------------------------------------------------------------- streams
     def active_streams(self, client_id: str = "default") -> int:
         return sum(s.active_streams(client_id) for s in self.shards.values())
@@ -282,8 +297,17 @@ class ShardedAdmission:
 
     def subscribe_release(self, callback) -> None:
         """``callback(server_id, client_id, now_s)`` on every freed slot —
-        the gateway's ``replan_on_release`` hook plugs in here."""
+        the gateway's ``replan_on_release`` hook and the steal scheduler's
+        declined-shard retry plug in here."""
         self._release_cbs.append(callback)
+
+    def unsubscribe_release(self, callback) -> None:
+        """Remove a freed-slot listener (idempotent) — per-scan subscribers
+        unsubscribe on drain so the list doesn't grow with scan count."""
+        try:
+            self._release_cbs.remove(callback)
+        except ValueError:
+            pass
 
     # ------------------------------------------------------------ borrowing
     def _peers(self, shard: AdmissionShard) -> list[AdmissionShard]:

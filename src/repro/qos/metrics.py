@@ -115,6 +115,18 @@ class QosStats:
         """Work-stealing range migrations across every granted fan-out."""
         return sum(c.steals for c in self.cluster)
 
+    @property
+    def declines(self) -> int:
+        """Steals refused because the thief's admission shard was at its
+        local quota (shard-aware stealing backing off)."""
+        return sum(c.declines for c in self.cluster)
+
+    @property
+    def re_steals(self) -> int:
+        """Stolen tails reclaimed by their original victim after the thief
+        degraded (one per range, by construction)."""
+        return sum(c.re_steals for c in self.cluster)
+
     def summary(self) -> str:
         """One benchmark-row string: the acceptance-criteria numbers."""
         parts = [f"depth_max={self.queue_depth_max}", f"shed={self.shed}",
@@ -125,6 +137,9 @@ class QosStats:
             parts.append(f"steals={self.steals} "
                          f"ticket_hits={self.ticket_hits} "
                          f"preempt={self.preemptions}")
+        if self.declines or self.re_steals:
+            parts.append(f"declines={self.declines} "
+                         f"re_steals={self.re_steals}")
         if self.replans:
             parts.append(f"replans={self.replans}")
         shards = getattr(self.admission, "shards", None)

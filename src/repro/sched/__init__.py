@@ -24,5 +24,6 @@ from .preempt import PreemptConfig, PreemptibleScan  # noqa: F401
 from .scheduler import AdaptiveScheduler  # noqa: F401
 from .share import Ticket, TicketStats, TicketTable  # noqa: F401
 from .steal import (  # noqa: F401
-    ProgressTracker, StealConfig, StealEvent, StealingPuller,
+    ProgressTracker, RateHistory, ServerRateStats, StealConfig, StealEvent,
+    StealingPuller,
 )

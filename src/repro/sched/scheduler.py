@@ -6,6 +6,13 @@ turn on any subset of work stealing (:mod:`.steal`), shared tickets
 (:mod:`.share`) and lease-boundary preemption (:mod:`.preempt`) by setting
 the corresponding config. ``AdaptiveScheduler.default()`` enables all three
 with conservative knobs.
+
+The scheduler also owns the cross-scan state the mechanisms learn from:
+``history`` (a :class:`~.steal.RateHistory`) lives here — NOT on the
+per-scan puller — so per-server EWMA rates, flap quarantines and
+repeat-straggler counts persist across every fan-out this scheduler drives.
+A repeat straggler is stolen from earlier on the next scan, and a server
+quarantined for flapping stays quarantined into the next scan's decisions.
 """
 from __future__ import annotations
 
@@ -15,7 +22,7 @@ from ..cluster.plan import ScanPlan
 from ..cluster.streams import MultiStreamPuller
 from .preempt import PreemptConfig
 from .share import TicketTable
-from .steal import StealConfig, StealingPuller
+from .steal import RateHistory, StealConfig, StealingPuller
 
 
 @dataclasses.dataclass
@@ -25,18 +32,22 @@ class AdaptiveScheduler:
     steal: StealConfig | None = None
     tickets: TicketTable | None = None
     preempt: PreemptConfig | None = None
+    history: RateHistory | None = None
 
     @classmethod
     def default(cls) -> "AdaptiveScheduler":
-        """All three mechanisms on, conservative thresholds."""
+        """All three mechanisms on, conservative thresholds, with a
+        persistent rate history feeding the steal decisions."""
         return cls(steal=StealConfig(), tickets=TicketTable(),
-                   preempt=PreemptConfig())
+                   preempt=PreemptConfig(), history=RateHistory())
 
     def make_puller(self, coordinator, plan: ScanPlan,
                     **kwargs) -> MultiStreamPuller:
         """The dataplane driver for one fan-out: a stealing puller when
-        stealing is enabled, the plain static one otherwise."""
+        stealing is enabled, the plain static one otherwise. The shared
+        ``history`` rides along so this scan's rate observations inform the
+        next scan's steal thresholds."""
         if self.steal is not None:
             return StealingPuller(coordinator, plan, steal=self.steal,
-                                  **kwargs)
+                                  history=self.history, **kwargs)
         return MultiStreamPuller(coordinator, plan, **kwargs)

@@ -137,6 +137,33 @@ def sched_table(qos) -> str:
     return "\n".join(rows)
 
 
+def steal_table(stats) -> str:
+    """Per-shard markdown table of work-stealing decisions — steals landed,
+    batches moved, admission declines and re-steals, attributed by each
+    event's ``server_id`` (events recorded before the field existed fall
+    back to their thief). Accepts a ``repro.qos.QosStats`` (aggregates its
+    per-request clusters) or a single ``repro.cluster.ClusterStats``.
+    Duck-typed like its siblings so this module stays dependency-free."""
+    clusters = getattr(stats, "cluster", None)
+    if clusters is None:
+        clusters = [stats]
+    rows = ["| shard | steals in | batches in | declines | re-steals in |",
+            "|---|---|---|---|---|"]
+    agg: dict = {}
+    for c in clusters:   # ClusterStats owns the per-event attribution rule
+        for sid, per in c.steal_attribution().items():
+            row = agg.setdefault(sid, {})
+            for key, count in per.items():
+                row[key] = row.get(key, 0) + count
+    keys = ("steal", "batches", "decline", "re_steal")
+    for sid in sorted(agg):
+        cells = [agg[sid].get(k, 0) for k in keys]
+        rows.append("| {} | {} | {} | {} | {} |".format(sid, *cells))
+    totals = [sum(r.get(k, 0) for r in agg.values()) for k in keys]
+    rows.append("| *total* | {} | {} | {} | {} |".format(*totals))
+    return "\n".join(rows)
+
+
 def admission_table(stats) -> str:
     """Per-shard markdown table for a ``repro.qos.DistributedStats`` —
     grant/denial/borrow/reconcile counters plus the token-bucket traffic —

@@ -79,6 +79,43 @@ def token_servers(n: int, num_seqs: int = 96, seq_len: int = 32,
     return servers
 
 
+# ------------------------------------------------- recorded straggler trace
+# The canonical straggler fixture: the test_sched table shape (16 batches of
+# 8192 rows, 2 selected columns) replicated on 4 servers with server 3's
+# fabric 4x slow. STRAGGLER_TRACE is the steal-event log the PR 3
+# static-factor StealingPuller produced on it (all values modeled, so the
+# replay is exact); the conformance suite replays today's puller with
+# history=None (and with every hysteresis knob neutralized) against it.
+
+STRAGGLER_ROWS = 1 << 17
+STRAGGLER_BATCH_ROWS = 1 << 13
+STRAGGLER_SQL = "SELECT c0, c1 FROM t"
+
+#: (victim, thief, start_batch, num_batches, epoch_s, victim_eta_s,
+#:  median_eta_s) per event, modeled times rounded to 12 decimals.
+STRAGGLER_TRACE = (
+    ("s3", "s0", 14, 2, 9.8181333e-05, 0.000196362667, 6.5290667e-05),
+)
+
+
+def straggler_coordinator(table=None) -> ClusterCoordinator:
+    """The coordinator STRAGGLER_TRACE was recorded against."""
+    if table is None:
+        table = make_numeric_table("t", STRAGGLER_ROWS, 4,
+                                   batch_rows=STRAGGLER_BATCH_ROWS)
+    return make_coordinator(4, "replica", table=table, slow=3, slowdown=4.0)
+
+
+def steal_event_trace(stats) -> tuple:
+    """A ClusterStats' steal events in STRAGGLER_TRACE's comparable shape
+    (kind-tagged fields excluded: the conformance claim is that the static
+    paths fire identically, and a decline/re-steal appearing at all would
+    change the event count)."""
+    return tuple((e.victim, e.thief, e.start_batch, e.num_batches,
+                  round(e.epoch_s, 12), round(e.victim_eta_s, 12),
+                  round(e.median_eta_s, 12)) for e in stats.steal_events)
+
+
 class ModeledClock:
     """A tiny monotonic modeled clock for admission/reconcile tests: the
     qos layer runs on caller-supplied modeled times, so tests drive one

@@ -5,6 +5,10 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+# the hypothesis suites run in their own CI job (pytest -m slow) so the
+# tier-1 smoke job stays fast; `pytest -q` still runs everything
+pytestmark = pytest.mark.slow
+
 from repro.core import (Fabric, RpcTransport, ThallusTransport,
                         batch_from_pydict, pack, schema, unpack,
                         pack_validity, unpack_validity, expose_batch,
@@ -215,6 +219,136 @@ def test_sharded_admission_invariants(trace):
     last = max((op[3] for op in ops), default=0.0)
     total = sum(s.tokens_at(last) for s in sharded.shards.values())
     assert total <= burst + 1e-9
+
+
+def _recording_history(**kwargs):
+    """A RateHistory that also logs raw observations (``.seen``) so the
+    EWMA bound invariant can be checked against exactly what the scheduler
+    saw. (Defined as a factory so the repro.sched import stays lazy.)"""
+    from repro.sched import RateHistory
+
+    class Recording(RateHistory):
+        def __init__(self, **kw):
+            super().__init__(**kw)
+            self.seen = {}
+
+        def observe(self, server_id, rate_s):
+            if rate_s > 0:
+                self.seen.setdefault(server_id, []).append(rate_s)
+            super().observe(server_id, rate_s)
+
+    return Recording(**kwargs)
+
+
+_CHAOS_TABLE = make_numeric_table("chaos", 1 << 16, 2, batch_rows=1 << 12)
+_CHAOS_SQL = "SELECT c0, c1 FROM chaos"                  # 16 batches
+
+
+@st.composite
+def steal_chaos(draw):
+    """A random cluster under the steal scheduler: per-server rate schedules
+    (steady, degrading, flapping), a sharded admission budget with borrowing
+    off, foreign tenants squatting on random shards, and one mid-scan
+    freed-slot release — the interleavings that drive steal, decline and
+    re-steal decisions."""
+    num_servers = draw(st.integers(2, 5))
+    factor = st.sampled_from([1.0, 1.0, 2.0, 4.0, 8.0])
+    schedules = [draw(st.lists(factor, min_size=1, max_size=5))
+                 for _ in range(num_servers)]
+    extra_cap = draw(st.integers(0, num_servers))
+    squatters = draw(st.lists(st.integers(0, num_servers - 1), max_size=3))
+    release_after = draw(st.integers(1, 14))
+    knobs = dict(
+        alpha=draw(st.floats(0.1, 1.0)),
+        flap_ratio=draw(st.floats(1.5, 4.0)),
+        quarantine_rounds=draw(st.integers(1, 12)),
+        repeat_decay=draw(st.floats(0.5, 1.0)),
+    )
+    steal = dict(
+        factor=draw(st.floats(1.2, 2.5)),
+        min_batches=draw(st.integers(1, 3)),
+        steal_headroom_min=draw(st.integers(1, 2)),
+        resteal_margin=draw(st.floats(1.0, 2.0)),
+    )
+    return (num_servers, schedules, extra_cap, squatters, release_after,
+            knobs, steal)
+
+
+@settings(max_examples=15, deadline=None)
+@given(steal_chaos())
+def test_steal_chaos_invariants(chaos):
+    """The scheduler chaos harness: under random per-server rate schedules
+    and steal/decline/re-steal interleavings over 2-5 admission shards,
+    (a) no shard ever admits past its local slice and the cluster never
+    exceeds the global cap, (b) every batch index is delivered exactly once
+    — byte-identical to the solo scan however the ranges migrated, (c) the
+    RateHistory EWMA stays within the min/max of the rates it observed, and
+    (d) re-steals never exceed steals (one re-steal per range)."""
+    from repro.cluster import ClusterCoordinator
+    from repro.core import FlappingFabric, ThallusServer
+    from repro.qos import (AdmissionConfig, Backpressure, DistributedConfig,
+                           ShardedAdmission)
+    from repro.sched import StealConfig, StealingPuller
+
+    (num_servers, schedules, extra_cap, squatters, release_after, knobs,
+     steal) = chaos
+    ids = [f"s{i}" for i in range(num_servers)]
+    cap = num_servers + extra_cap
+    admission = ShardedAdmission(
+        AdmissionConfig(max_streams_total=cap), ids,
+        dist=DistributedConfig(borrow_limit=0))
+    coord = ClusterCoordinator(admission=admission)
+    for sid, schedule in zip(ids, schedules):
+        coord.add_server(sid, ThallusServer(
+            Engine(), FlappingFabric(schedule=schedule)))
+    coord.place_replicas("/d", _CHAOS_TABLE)
+    history = _recording_history(**knobs)
+    puller = StealingPuller(coord,
+                            coord.plan(_CHAOS_SQL, "/d",
+                                       num_streams=num_servers),
+                            steal=StealConfig(**steal), history=history,
+                            client_id="chaos")
+    held = []
+    for shard_idx in squatters:                 # foreign tenants squat
+        try:
+            admission.acquire_stream("squatter", server_id=ids[shard_idx])
+            held.append(ids[shard_idx])
+        except Backpressure:
+            pass
+    got, delivered = {}, 0
+    for idx, batch in puller.batches():
+        got.setdefault(idx, []).append(batch)
+        delivered += 1
+        if delivered == release_after and held:  # a freed-slot event
+            admission.release_stream("squatter", server_id=held.pop())
+    stats = puller.stats()
+    # (a) shard-local and global admission safety, even through declines
+    for sid, shard in admission.shards.items():
+        assert shard.stats.peak_active <= shard.config.max_streams_total
+    assert admission.peak_total <= cap
+    assert stats.declines >= 0 and all(
+        getattr(e, "server_id", "") for e in stats.steal_events)
+    # (b) exactly-once delivery in global scan order
+    order = sorted(range(len(puller.pullers)),
+                   key=lambda i: puller.pullers[i].endpoint.start_batch)
+    flat = [b for i in order for b in got.get(i, [])]
+    solo = Engine()
+    solo.register("/d", _CHAOS_TABLE)
+    ref = list(solo.execute(_CHAOS_SQL, "/d").read_all())
+    assert len(flat) == len(ref) == 16
+    for g, r in zip(flat, ref):
+        np.testing.assert_array_equal(g.column("c0").values,
+                                      r.column("c0").values)
+        np.testing.assert_array_equal(g.column("c1").values,
+                                      r.column("c1").values)
+    # (c) the EWMA never leaves the envelope of observed rates
+    for sid, rates in history.seen.items():
+        ewma = history.rate_for(sid)
+        assert min(rates) - 1e-12 <= ewma <= max(rates) + 1e-12
+    # (d) one re-steal per range: re-steals can never outnumber steals
+    assert stats.re_steals <= stats.steals
+    # nothing leaked: the scan's own streams all closed
+    assert admission.active_streams("chaos") == 0
 
 
 @settings(max_examples=15, deadline=None)

@@ -1,0 +1,484 @@
+"""Shard-aware steal hysteresis (repro.sched.RateHistory): EWMA/flap
+mechanics, repeat-straggler thresholds across scans, flap quarantine (victim
+AND thief side), thief-side admission declines with next-fastest fallback and
+freed-slot retry, victim re-steal from a degraded thief (byte-identical, one
+re-steal per range), the PR 3 conformance replay, and the per-shard
+StealEvent attribution through metrics and report tables."""
+import dataclasses
+import types
+
+import numpy as np
+import pytest
+from conftest import (STRAGGLER_SQL, STRAGGLER_TRACE, make_coordinator,
+                      reference_batches, steal_event_trace,
+                      straggler_coordinator)
+
+from repro.cluster import ClusterCoordinator
+from repro.core import Fabric, FabricConfig, FlappingFabric, ThallusServer
+from repro.engine import Engine, make_numeric_table
+from repro.qos import (AdmissionConfig, AdmissionController,
+                       DistributedConfig, ShardedAdmission)
+from repro.sched import (AdaptiveScheduler, RateHistory, StealConfig,
+                         StealingPuller)
+
+ROWS = 1 << 17
+BATCH_ROWS = 1 << 13                     # -> 16 batches of ~128 KiB wire
+SQL = STRAGGLER_SQL
+TABLE = make_numeric_table("t", ROWS, 4, batch_rows=BATCH_ROWS)
+BASE = FabricConfig()
+SLOW4 = FabricConfig(rpc_bw=BASE.rpc_bw / 4, rdma_bw=BASE.rdma_bw / 4)
+
+
+def _assert_batches_equal(got, ref):
+    assert len(got) == len(ref)
+    for g, r in zip(got, ref):
+        np.testing.assert_array_equal(g.column("c0").values,
+                                      r.column("c0").values)
+        np.testing.assert_array_equal(g.column("c1").values,
+                                      r.column("c1").values)
+
+
+def _flat(puller, got):
+    order = sorted(range(len(puller.pullers)),
+                   key=lambda i: puller.pullers[i].endpoint.start_batch)
+    return [b for i in order for b in got.get(i, [])]
+
+
+def _cluster(slow=None, slowdown=4.0, admission=None):
+    return make_coordinator(4, "replica", table=TABLE, admission=admission,
+                            slow=slow, slowdown=slowdown)
+
+
+# ------------------------------------------------------------- rate history
+
+
+def test_history_ewma_tracks_within_observed_bounds():
+    hist = RateHistory(alpha=0.4)
+    rates = [4.0, 1.0, 2.5, 8.0, 0.5]
+    for r in rates:
+        hist.observe("s0", r)
+    h = hist.server("s0")
+    assert h.observations == len(rates)
+    assert min(rates) <= h.rate_s <= max(rates)
+    assert hist.rate_for("s0") == h.rate_s
+    assert hist.rate_for("nobody") is None
+    # non-positive rates are ignored, not folded in
+    hist.observe("s0", 0.0)
+    assert h.observations == len(rates)
+
+
+def test_history_validation():
+    for bad in (dict(alpha=0.0), dict(alpha=1.5), dict(flap_ratio=1.0),
+                dict(quarantine_rounds=0), dict(repeat_decay=0.0),
+                dict(min_factor=0.9)):
+        with pytest.raises(ValueError):
+            RateHistory(**bad)
+    with pytest.raises(ValueError):
+        StealConfig(steal_headroom_min=0)
+    with pytest.raises(ValueError):
+        StealConfig(resteal_margin=0.9)
+
+
+def test_flap_quarantine_lasts_exactly_k_rounds():
+    K = 5
+    hist = RateHistory(flap_ratio=2.0, quarantine_rounds=K)
+    hist.observe("s0", 1.0)
+    hist.observe("s0", 4.0)              # sharp slow-down: direction set
+    assert not hist.quarantined("s0")    # one move is not a flap
+    hist.observe("s0", 1.0)              # reversal -> flap
+    assert hist.server("s0").flaps == 1
+    for round_no in range(K):
+        assert hist.quarantined("s0"), f"lifted early at round {round_no}"
+        hist.tick()
+    assert not hist.quarantined("s0")    # lifts exactly at K
+    assert hist.total_flaps == 1
+
+
+def test_monotonic_degradation_is_not_a_flap():
+    hist = RateHistory(flap_ratio=2.0)
+    for r in (1.0, 4.0, 16.0, 64.0):     # steadily worse, never reverses
+        hist.observe("s0", r)
+    assert hist.server("s0").flaps == 0
+    assert not hist.quarantined("s0")
+
+
+def test_repeat_straggler_factor_decays_to_floor():
+    hist = RateHistory(repeat_decay=0.6, min_factor=1.1)
+    assert hist.factor_for("s0", 2.0) == 2.0
+    hist.record_steal("s0")
+    assert hist.factor_for("s0", 2.0) == pytest.approx(2.0 * 0.6)
+    for _ in range(8):
+        hist.record_steal("s0")
+    assert hist.factor_for("s0", 2.0) == 1.1     # floored
+    assert hist.total_steals == 9
+    assert hist.factor_for("s1", 2.0) == 2.0     # per-server, not global
+
+
+# ----------------------------------------------- hysteresis across two scans
+
+
+def _mild_straggler_coordinator(factor):
+    """Replica cluster whose s3 degrades by ``factor`` on the RDMA path —
+    under the static 2x threshold when factor ~1.9 (modeled wire includes
+    constant setup/registration terms, so the observed ratio is lower)."""
+    coord = ClusterCoordinator()
+    for i in range(3):
+        coord.add_server(f"s{i}", ThallusServer(Engine(), Fabric(BASE)))
+    coord.add_server("s3", ThallusServer(
+        Engine(), FlappingFabric(BASE, schedule=[factor])))
+    coord.place_replicas("/d", TABLE)
+    return coord
+
+
+def test_repeat_straggler_stolen_earlier_on_second_scan():
+    """Scan 1: s3 is 4x slow — both static and history-aware stealing fire.
+    Scan 2: s3 degrades only mildly (under the static threshold) — only the
+    history, carrying scan 1's verdict, steals; the makespan improves."""
+    config = StealConfig(min_batches=1)  # the mild tail is short-lived
+    static_runs = {}
+    for scan, factor in ((1, 4.0), (2, 2.1)):
+        coord = _mild_straggler_coordinator(factor)
+        stats = StealingPuller(coord, coord.plan(SQL, "/d"),
+                               steal=config).run()
+        static_runs[scan] = stats
+    assert static_runs[1].steals >= 1
+    assert static_runs[2].steals == 0    # static factor is blind to repeats
+
+    hist = RateHistory()
+    hist_runs = {}
+    for scan, factor in ((1, 4.0), (2, 2.1)):
+        coord = _mild_straggler_coordinator(factor)
+        hist_runs[scan] = StealingPuller(coord, coord.plan(SQL, "/d"),
+                                         steal=config,
+                                         history=hist).run()
+    assert hist_runs[1].steals >= 1      # scan 1 records the offense
+    assert hist.factor_for("s3", 2.0) < 2.0
+    assert hist_runs[2].steals >= 1      # ...so scan 2 fires earlier
+    assert (hist_runs[2].modeled_critical_path_s
+            < static_runs[2].modeled_critical_path_s)
+
+
+def test_quarantined_server_is_not_a_victim():
+    """A 4x straggler that the history has quarantined for flapping is left
+    alone — stealing from a server whose rate estimate is untrustworthy is
+    churn — and the scan still completes byte-identically."""
+    hist = RateHistory(quarantine_rounds=10_000)
+    hist.observe("s3", 1.0)
+    hist.observe("s3", 4.0)
+    hist.observe("s3", 1.0)              # flap -> quarantined
+    assert hist.quarantined("s3")
+    coord = _cluster(slow=3)
+    got = {}
+    puller = StealingPuller(coord, coord.plan(SQL, "/d"),
+                            steal=StealConfig(), history=hist)
+    stats = puller.run(lambda i, b: got.setdefault(i, []).append(b))
+    assert stats.steals == 0
+    _assert_batches_equal(_flat(puller, got),
+                          reference_batches(SQL, table=TABLE))
+
+
+def test_quarantined_server_is_not_a_thief():
+    """With the (otherwise fastest) idle replica quarantined, a stolen tail
+    lands on the next candidate instead."""
+    hist = RateHistory(quarantine_rounds=10_000)
+    hist.observe("s0", 1.0)
+    hist.observe("s0", 4.0)
+    hist.observe("s0", 1.0)              # s0 flaps -> may not thieve
+    coord = _cluster(slow=3)
+    stats = StealingPuller(coord, coord.plan(SQL, "/d"),
+                           steal=StealConfig(), history=hist).run()
+    assert stats.steals >= 1
+    assert all(e.thief != "s0" for e in stats.steal_events)
+    # the PR 3 trace proves s0 is the thief when nothing is quarantined
+    assert STRAGGLER_TRACE[0][1] == "s0"
+
+
+# ------------------------------------------------- shard-aware steal declines
+
+
+def _sharded_cluster(total_cap=6):
+    """3-replica cluster (s2 4x slow) behind per-server admission shards
+    with borrowing off — shard capacities stay at their dealt slices, so
+    local headroom is exact."""
+    adm = ShardedAdmission(AdmissionConfig(max_streams_total=total_cap),
+                           ["s0", "s1", "s2"],
+                           dist=DistributedConfig(borrow_limit=0))
+    coord = ClusterCoordinator(admission=adm)
+    for sid, cfg in (("s0", BASE), ("s1", BASE), ("s2", SLOW4)):
+        coord.add_server(sid, ThallusServer(Engine(), Fabric(cfg)))
+    coord.place_replicas("/d", TABLE)
+    return coord, adm
+
+
+def test_thief_at_shard_quota_declines_and_next_fastest_is_chosen():
+    """Every shard's second slot is held by a foreign tenant; a drained
+    thief's own freed slot leaves headroom 1 < steal_headroom_min, so the
+    first candidate declines — until one shard's foreign stream closes and
+    the steal lands there."""
+    coord, adm = _sharded_cluster()
+    puller = StealingPuller(coord, coord.plan(SQL, "/d"),
+                            steal=StealConfig(steal_headroom_min=2),
+                            history=RateHistory(), client_id="c")
+    adm.acquire_stream("f", server_id="s0")
+    adm.acquire_stream("f", server_id="s1")
+    adm.release_stream("f", server_id="s0")   # s0 drains ahead of the scan
+    got = {}
+    stats = puller.run(lambda i, b: got.setdefault(i, []).append(b))
+    kinds = [(e.kind, e.server_id) for e in stats.steal_events]
+    assert ("decline", "s1") in kinds          # s1 was full: declined
+    assert stats.steals == 1
+    steal = next(e for e in stats.steal_events if e.kind == "steal")
+    assert steal.thief == "s0" and steal.server_id == "s0"
+    assert steal.victim == "s2"
+    _assert_batches_equal(_flat(puller, got),
+                          reference_batches(SQL, table=TABLE))
+    # the foreign slot was never evicted and no shard exceeded its slice
+    for sid, shard in adm.shards.items():
+        assert shard.stats.peak_active <= shard.config.max_streams_total
+
+
+def test_declined_steal_retries_on_freed_slot_event():
+    """With BOTH candidate shards full, every steal attempt declines and the
+    straggler crawls — until a foreign stream closes mid-scan: the freed-slot
+    event reopens that shard and the previously declined steal lands on it."""
+    coord, adm = _sharded_cluster()
+    puller = StealingPuller(coord, coord.plan(SQL, "/d"),
+                            steal=StealConfig(steal_headroom_min=2),
+                            history=RateHistory(), client_id="c")
+    adm.acquire_stream("f", server_id="s0")
+    adm.acquire_stream("f", server_id="s1")
+    released, got = False, {}
+    for idx, batch in puller.batches():
+        got.setdefault(idx, []).append(batch)
+        if not released and puller.stats().declines >= 2:
+            released = True
+            adm.release_stream("f", server_id="s1")
+    assert released, "both shards should have declined before any release"
+    stats = puller.stats()
+    assert stats.declines >= 2
+    assert stats.steals == 1
+    steal = next(e for e in stats.steal_events if e.kind == "steal")
+    assert steal.thief == "s1"           # the shard the freed slot reopened
+    # the decline for s1 was recorded BEFORE its retry succeeded
+    decline_idx = next(i for i, e in enumerate(stats.steal_events)
+                       if e.kind == "decline" and e.server_id == "s1")
+    steal_idx = stats.steal_events.index(steal)
+    assert decline_idx < steal_idx
+    _assert_batches_equal(_flat(puller, got),
+                          reference_batches(SQL, table=TABLE))
+
+
+def test_steal_scheduler_unsubscribes_freed_slot_hook_on_drain():
+    """Regression: one freed-slot listener per scan on a long-lived
+    controller would grow without bound — the puller must retire its
+    subscription when the drive loop ends."""
+    coord, adm = _sharded_cluster()
+    before = len(adm._release_cbs)
+    for _ in range(3):
+        StealingPuller(coord, coord.plan(SQL, "/d"),
+                       steal=StealConfig(), history=RateHistory(),
+                       client_id="c").run()
+    assert len(adm._release_cbs) == before
+
+
+def test_headroom_queries_are_local_and_duck_typed():
+    adm = ShardedAdmission(AdmissionConfig(max_streams_per_client=4,
+                                           max_streams_total=6),
+                           ["s0", "s1"])
+    # slices: quota 2+2, cap 3+3
+    adm.acquire_stream("c", server_id="s0")
+    adm.acquire_stream("c", server_id="s0")
+    assert adm.headroom("s0", "c") == 0       # local quota slice exhausted...
+    assert adm.headroom("s1", "c") == 2       # ...peer slack is NOT counted
+    central = AdmissionController(AdmissionConfig(max_streams_per_client=3))
+    central.acquire_stream("c")
+    assert central.headroom("anywhere", "c") == 2
+    assert AdmissionController().headroom() is None      # unlimited
+    coord = ClusterCoordinator()
+    assert coord.admission_headroom("s0") is None        # no controller
+    coord.admission = central
+    assert coord.admission_headroom("s0", "c") == 2
+    coord.admission = object()                # no headroom query: no opinion
+    assert coord.admission_headroom("s0") is None
+
+
+# ------------------------------------------------------------------ re-steal
+
+
+def _resteal_cluster(thief_schedule):
+    """2 replicas: s0 fast then degrading per ``thief_schedule``; s1 a
+    constant 4x straggler whose tail s0 steals."""
+    coord = ClusterCoordinator()
+    coord.add_server("s0", ThallusServer(
+        Engine(), FlappingFabric(BASE, schedule=thief_schedule)))
+    coord.add_server("s1", ThallusServer(Engine(), Fabric(SLOW4)))
+    coord.place_replicas("/d", TABLE)
+    return coord
+
+
+def test_victim_resteals_degraded_thief_byte_identical():
+    """s0 steals s1's tail, then degrades 8x; the recovered victim reclaims
+    the remaining tail at s0's next lease boundary, and the re-stolen range
+    is byte-identical to the solo scan."""
+    coord = _resteal_cluster([1.0] * 8 + [8.0] * 100)
+    puller = StealingPuller(coord, coord.plan(SQL, "/d"),
+                            steal=StealConfig(max_steals=2),
+                            history=RateHistory())
+    got = {}
+    stats = puller.run(lambda i, b: got.setdefault(i, []).append(b))
+    assert stats.steals == 1 and stats.re_steals == 1
+    re_steal = next(e for e in stats.steal_events if e.kind == "re_steal")
+    assert re_steal.victim == "s0" and re_steal.thief == "s1"
+    assert re_steal.server_id == "s1"    # attributed to the reclaiming shard
+    assert re_steal.num_batches >= 1
+    ref = reference_batches(SQL, table=TABLE)
+    _assert_batches_equal(_flat(puller, got), ref)
+    # the reclaimed tail specifically matches the solo scan's batches
+    back = next(p for p in puller.pullers
+                if p.endpoint.start_batch == re_steal.start_batch)
+    _assert_batches_equal(
+        got[puller.pullers.index(back)],
+        ref[re_steal.start_batch:re_steal.start_batch
+            + re_steal.num_batches])
+
+
+def test_one_resteal_per_range_under_adversarial_rates():
+    """Adversarial schedule: the thief degrades while holding the tail, then
+    recovers to look attractive again. The range still moves back at most
+    once — no victim<->thief ping-pong — even with budget to spare."""
+    coord = _resteal_cluster([1.0] * 8 + [8.0] * 3 + [1.0] * 100)
+    puller = StealingPuller(coord, coord.plan(SQL, "/d"),
+                            steal=StealConfig(max_steals=16),
+                            history=RateHistory())
+    got = {}
+    stats = puller.run(lambda i, b: got.setdefault(i, []).append(b))
+    assert stats.re_steals <= stats.steals   # every re-steal undoes one steal
+    assert stats.batches == 16               # nothing lost in the churn
+    _assert_batches_equal(_flat(puller, got),
+                          reference_batches(SQL, table=TABLE))
+
+
+def test_resteal_disabled_without_history():
+    """Without a history the degraded thief keeps its tail (PR 3 semantics):
+    no re-steal events, scan still byte-identical."""
+    coord = _resteal_cluster([1.0] * 8 + [8.0] * 100)
+    puller = StealingPuller(coord, coord.plan(SQL, "/d"),
+                            steal=StealConfig())
+    got = {}
+    stats = puller.run(lambda i, b: got.setdefault(i, []).append(b))
+    assert stats.re_steals == 0
+    _assert_batches_equal(_flat(puller, got),
+                          reference_batches(SQL, table=TABLE))
+
+
+# ------------------------------------------------------ conformance with PR 3
+
+
+def test_history_none_replays_pr3_trace():
+    """The drop-in guarantee: with history=None the puller's steal events
+    match the recorded PR 3 static-factor trace exactly — same victims,
+    thieves, ranges and modeled times."""
+    coord = straggler_coordinator(table=TABLE)
+    stats = StealingPuller(coord, coord.plan(SQL, "/d"),
+                           steal=StealConfig()).run()
+    assert steal_event_trace(stats) == STRAGGLER_TRACE
+    assert all(e.kind == "steal" for e in stats.steal_events)
+
+
+def test_neutralized_history_replays_pr3_trace():
+    """Hysteresis with every threshold disabled (no decay, no flap, floor at
+    the static factor) must also replay the PR 3 trace — the stateful paths
+    deviate only when their knobs say so."""
+    hist = RateHistory(repeat_decay=1.0, min_factor=1.0, flap_ratio=1e9)
+    coord = straggler_coordinator(table=TABLE)
+    stats = StealingPuller(coord, coord.plan(SQL, "/d"),
+                           steal=StealConfig(), history=hist).run()
+    assert steal_event_trace(stats) == STRAGGLER_TRACE
+    assert hist.total_flaps == 0
+
+
+# ------------------------------------- shard identity on events (regression)
+
+
+def test_steal_events_carry_shard_identity():
+    """Regression: StealEvents used to carry no shard identity; now every
+    event is attributed to the shard it landed on and ClusterStats backfills
+    legacy events from their thief when rendering."""
+    coord = _cluster(slow=3)
+    stats = StealingPuller(coord, coord.plan(SQL, "/d"),
+                           steal=StealConfig()).run()
+    assert stats.steals >= 1
+    for e in stats.steal_events:
+        assert e.server_id == e.thief
+    attribution = stats.steal_attribution()
+    assert attribution[stats.steal_events[0].thief]["steal"] >= 1
+    # a legacy event (recorded before kind/server_id existed) backfills
+    legacy = types.SimpleNamespace(victim="sX", thief="sY",
+                                   start_batch=0, num_batches=3)
+    stats.steal_events.append(legacy)
+    assert stats.steal_attribution()["sY"] == {"steal": 1, "batches": 3}
+    assert stats.steals >= 2             # untagged events count as steals
+
+
+def test_steal_table_attributes_per_shard():
+    from repro.utils.report import steal_table
+    coord = _resteal_cluster([1.0] * 8 + [8.0] * 100)
+    puller = StealingPuller(coord, coord.plan(SQL, "/d"),
+                            steal=StealConfig(), history=RateHistory())
+    stats = puller.run()
+    out = steal_table(stats)             # bare ClusterStats accepted
+    assert "| s0 |" in out and "| s1 |" in out and "*total*" in out
+    # the re-steal shows up in the reclaiming shard's column
+    s1_row = next(line for line in out.splitlines()
+                  if line.startswith("| s1 |"))
+    assert s1_row.split("|")[5].strip() == "1"
+
+    class QosLike:                       # QosStats-shaped aggregate
+        cluster = [stats, stats]
+
+    doubled = steal_table(QosLike())
+    total = next(line for line in doubled.splitlines()
+                 if line.startswith("| *total* |"))
+    assert total.split("|")[2].strip() == str(2 * stats.steals)
+
+
+# ----------------------------------------------------- scheduler integration
+
+
+def test_adaptive_scheduler_persists_history_across_gateway_runs():
+    """The history lives on the AdaptiveScheduler, not the per-scan puller:
+    a gateway drain records the straggler, and the next drain (a fresh
+    fan-out) starts with the decayed per-victim factor."""
+    from repro.qos import ScanGateway, ScanRequest
+    scheduler = AdaptiveScheduler(steal=StealConfig(),
+                                  history=RateHistory())
+    ref = reference_batches(SQL, table=TABLE)
+    for scan in range(2):
+        gateway = ScanGateway(_cluster(slow=3), scheduler=scheduler)
+        req = gateway.submit(ScanRequest("c", "interactive", SQL, "/d"))
+        gateway.run()
+        result = gateway.result(req.request_id)
+        assert result.cluster.steals >= 1
+        _assert_batches_equal(result.batches, ref)
+    assert scheduler.history.total_steals >= 2
+    assert scheduler.history.factor_for("s3", 2.0) < 2.0 * 0.75 + 1e-12
+    assert scheduler.history.server("s3").observations > 0
+    # AdaptiveScheduler.default() wires a history in
+    assert AdaptiveScheduler.default().history is not None
+
+
+def test_qos_stats_surface_decline_and_resteal_counters():
+    from repro.qos.metrics import QosStats
+    coord, adm = _sharded_cluster()
+    puller = StealingPuller(coord, coord.plan(SQL, "/d"),
+                            steal=StealConfig(steal_headroom_min=2),
+                            history=RateHistory(), client_id="c")
+    adm.acquire_stream("f", server_id="s0")
+    adm.acquire_stream("f", server_id="s1")
+    adm.release_stream("f", server_id="s0")
+    stats = puller.run()
+    qos = QosStats()
+    qos.cluster.append(stats)
+    assert qos.declines == stats.declines >= 1
+    assert qos.steals == stats.steals
+    assert "declines=" in qos.summary()

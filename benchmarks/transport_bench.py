@@ -44,6 +44,15 @@ checks:
   thief whose admission shard is at its local quota declines the stolen
   range (never over-admits) until a freed-slot event reopens the shard.
 
+Every judged number routes through the continuous-baselining layer
+(``repro.obs``): called directly the scenarios self-assert on the constants
+above; driven by ``main()`` the constants are bootstrap floors/ceilings and
+the verdict comes from the rolling baseline envelope over the run
+trajectory. ``--scenario all`` runs every axis, reports a combined pass/fail
+summary on stderr and exits nonzero if ANY scenario failed; ``--json DIR``
+appends each scenario's ``BENCH_<scenario>.json`` run record and the
+``trajectory.jsonl`` line that feeds ``python -m repro.obs.baseline DIR``.
+
 Runnable standalone::
 
     PYTHONPATH=src python benchmarks/transport_bench.py --scenario straggler
@@ -70,6 +79,8 @@ from repro.qos import (AdmissionConfig, AdmissionController, Backpressure,
                        ScanRequest, ShardedAdmission)
 from repro.sched import (AdaptiveScheduler, RateHistory, StealConfig,
                          StealingPuller, TicketTable)
+from repro.obs import (MetricPolicy, RunRecord, append_run, current_git_sha,
+                       detect_events, load_trajectory)
 
 TOTAL_COLS = 8
 CLUSTER_ROWS = 1 << 20
@@ -80,6 +91,80 @@ CONTENTION_SHARDS = 4
 STRAGGLER_REPLICAS = 4
 STRAGGLER_SLOWDOWN = 4.0
 SHARING_QUERIES = 4
+
+
+# --------------------------------------------------------------------------
+# Continuous baselining: every judged number routes through _metric(). Called
+# directly (tests, `from benchmarks import transport_bench; run_flap()`) the
+# scenario functions keep their legacy self-asserting contract — the hand-
+# tuned constant fails immediately. Driven by main(), the constant is only a
+# bootstrap floor/ceiling: the verdict comes from the rolling baseline
+# envelope (median ± 3·MAD over the trajectory) once the scenario has
+# MIN_RUNS of history, and the run record is appended to the trajectory
+# with --json DIR. Metrics with no constant at all are envelope-only —
+# pure drift detectors with nothing to hand-tune.
+
+_RUN = None          # the active ScenarioRun while main() drives a scenario
+
+
+class ScenarioRun:
+    """One scenario's judged metrics + the policies that judge them."""
+
+    def __init__(self, scenario: str, out_dir: str | None = None,
+                 config: dict | None = None):
+        self.scenario = scenario
+        self.out_dir = out_dir
+        self.config = config or {}
+        self.metrics: dict[str, float] = {}
+        self.policies: dict[str, MetricPolicy] = {}
+
+    def add(self, name: str, value: float, policy: MetricPolicy) -> None:
+        self.metrics[name] = float(value)
+        self.policies[name] = policy
+
+    def finalize(self):
+        """Judge this run against the trajectory; persist when --json.
+        Returns ``(record, events)``."""
+        import datetime
+        record = RunRecord(
+            scenario=self.scenario, metrics=dict(self.metrics),
+            policies={n: p.to_dict() for n, p in self.policies.items()},
+            git_sha=current_git_sha(), config=dict(self.config),
+            timestamp=datetime.datetime.now(
+                datetime.timezone.utc).isoformat(timespec="seconds"))
+        history = (load_trajectory(self.out_dir, self.scenario)
+                   if self.out_dir else [])
+        events = detect_events(record, history, self.policies)
+        if self.out_dir:
+            append_run(self.out_dir, record)
+        return record, events
+
+
+def _metric(name: str, value: float, *, floor: float | None = None,
+            ceiling: float | None = None, better: str | None = None,
+            rel_slack: float = 0.10, detail: str = "") -> None:
+    """Register a judged benchmark metric.
+
+    Under main()'s ScenarioRun the verdict is deferred to finalize() —
+    bootstrap floor/ceiling plus the rolling-baseline envelope. Called
+    directly, the constants assert immediately (legacy behavior), and
+    envelope-only metrics (no floor, no ceiling) pass through unjudged.
+    """
+    if better is None:
+        better = "higher" if floor is not None else "lower"
+    if _RUN is not None:
+        _RUN.add(name, value, MetricPolicy(
+            name, better=better, floor=floor, ceiling=ceiling,
+            rel_slack=rel_slack))
+        return
+    suffix = f" — {detail}" if detail else ""
+    if floor is not None:
+        assert value >= floor, (
+            f"{name} = {value:.3g} below acceptance floor {floor:g}{suffix}")
+    if ceiling is not None:
+        assert value <= ceiling, (
+            f"{name} = {value:.3g} above acceptance ceiling "
+            f"{ceiling:g}{suffix}")
 
 
 def _server(nrows: int) -> ThallusServer:
@@ -111,6 +196,10 @@ def run(transport: str = "both") -> list[Row]:
                                 med(cls) * 1e6, f"transport={transport}"))
                 continue
             t_rpc, t_th = med(RpcClient), med(ThallusClient)
+            if tag == "1M" and ncols == TOTAL_COLS:
+                # host-measured: wide slack, envelope-only (no constant)
+                _metric("fig2_speedup_rows1M_cols8", t_rpc / t_th,
+                        better="higher", rel_slack=0.35)
             rows.append(Row(
                 f"transport_rows{tag}_cols{ncols}", t_th * 1e6,
                 f"speedup={t_rpc / t_th:.2f}x rpc_us={t_rpc*1e6:.1f}"))
@@ -126,6 +215,7 @@ def run_cluster() -> list[Row]:
                                batch_rows=CLUSTER_BATCH_ROWS)
     sql = "SELECT " + ", ".join(f"c{i}" for i in range(TOTAL_COLS)) + " FROM t"
     rows: list[Row] = []
+    crit: dict[tuple[int, bool], float] = {}
     for streams, pooled in ((1, False), (4, False), (4, True), (8, True)):
         coordinator = ClusterCoordinator()
         for i in range(streams):
@@ -144,8 +234,12 @@ def run_cluster() -> list[Row]:
                    f"work_us={stats.sum_total_s*1e6:.1f}")
         if pool is not None:
             derived += f" pool_hit={pool.stats.hit_rate:.2f}"
+        crit[(streams, pooled)] = stats.modeled_critical_path_s
         rows.append(Row(f"cluster_streams{streams}_pool{int(pooled)}",
                         stats.critical_path_s * 1e6, derived))
+    _metric("cluster_pool_speedup_streams4",
+            crit[(4, False)] / crit[(4, True)],
+            better="higher", rel_slack=0.25)
     return rows
 
 
@@ -190,6 +284,7 @@ def run_contention() -> list[Row]:
     table = make_numeric_table("t", CONTENTION_ROWS, TOTAL_COLS,
                                batch_rows=CONTENTION_BATCH_ROWS)
     rows: list[Row] = []
+    p50: dict[bool, float] = {}
     for quotas in (False, True):
         admission = AdmissionController(AdmissionConfig(
             max_streams_per_client=2, lease_rate_per_s=1e3,
@@ -204,6 +299,7 @@ def run_contention() -> list[Row]:
                                        cost_hint=8.0, deadline_s=1e-6))
         gateway.run()
         qos = gateway.stats
+        p50[quotas] = qos.klass("interactive").p50_grant_latency_s
         for klass in sorted(qos.classes):
             c = qos.classes[klass]
             rows.append(Row(
@@ -213,6 +309,11 @@ def run_contention() -> list[Row]:
                 f"granted={c.granted}/{c.submitted} shed={c.shed} "
                 f"tput_MBps={c.throughput_bytes_per_s / 1e6:.1f} | "
                 + qos.summary()))
+    if p50[False] > 0:
+        # the acceptance story: WFQ + quotas must keep cutting interactive
+        # p50 grant latency vs FIFO — envelope-only, no hand-tuned constant
+        _metric("contention_interactive_p50_ratio", p50[True] / p50[False],
+                better="lower", rel_slack=0.25)
     return rows
 
 
@@ -256,10 +357,10 @@ def run_straggler() -> list[Row]:
             f"work_us={stats.sum_total_s * 1e6:.1f}"))
     speedup = critical[False] / critical[True]
     rows.append(Row("straggler_speedup", speedup,
-                    f"modeled critical path, stealing off/on; want >= 1.5"))
-    assert speedup >= 1.5, (
-        f"work stealing recovered only {speedup:.2f}x of the straggler's "
-        f"critical path (acceptance floor: 1.5x)")
+                    f"modeled critical path, stealing off/on; "
+                    f"bootstrap floor 1.5, then baseline envelope"))
+    _metric("straggler_speedup", speedup, floor=1.5,
+            detail="work stealing vs the straggler's critical path")
     return rows
 
 
@@ -302,10 +403,9 @@ def run_sharing() -> list[Row]:
     rows = [row_off, row_on,
             Row("sharing_work_ratio", ratio,
                 f"N={SHARING_QUERIES} identical queries vs 1 query's "
-                f"server-side work; want < 2")]
-    assert ratio < 2.0, (
-        f"shared tickets left server-side work at {ratio:.2f}x one query "
-        f"(acceptance ceiling: 2x)")
+                f"server-side work; bootstrap ceiling 2, then envelope")]
+    _metric("sharing_work_ratio", ratio, ceiling=2.0,
+            detail="shared tickets vs one query's server-side work")
     return rows
 
 
@@ -365,10 +465,11 @@ def run_admission() -> list[Row]:
     for tag, p in (("1", one_shard), (str(CONTENTION_SHARDS), sharded)):
         ratio = p / central if central > 0 else 1.0
         rows.append(Row(f"admission_p50_ratio_shards{tag}", ratio,
-                        f"vs centralized interactive p50; want <= 1.5"))
-        assert ratio <= 1.5, (
-            f"{tag}-shard admission costs {ratio:.2f}x the centralized "
-            f"controller's interactive p50 grant latency (ceiling: 1.5x)")
+                        f"vs centralized interactive p50; bootstrap "
+                        f"ceiling 1.5, then baseline envelope"))
+        _metric(f"admission_p50_ratio_shards{tag}", ratio, ceiling=1.5,
+                detail=f"{tag}-shard vs centralized interactive p50 "
+                       f"grant latency")
 
     # ---- safety: a seeded storm must never over-admit the global budget
     import numpy as np
@@ -490,13 +591,19 @@ def run_flap() -> list[Row]:
                 "the flapping replica was never caught flapping"
     speedup = span[("nohist", 2)] / span[("hist", 2)]
     rows.append(Row("flap_speedup", speedup,
-                    "scan-2 modeled makespan, history off/on; want >= 1.3"))
-    assert speedup >= 1.3, (
-        f"steal hysteresis recovered only {speedup:.2f}x of the repeat "
-        f"straggler's scan-2 makespan (acceptance floor: 1.3x)")
-    assert waste["hist"] <= 1, (
-        f"history-aware stealing wasted {waste['hist']} steals on the "
-        f"flapping replica (acceptance ceiling: 1)")
+                    "scan-2 modeled makespan, history off/on; bootstrap "
+                    "floor 1.3, then baseline envelope"))
+    _metric("flap_speedup", speedup, floor=1.3,
+            detail="steal hysteresis vs the repeat straggler's scan-2 "
+                   "makespan")
+    _metric("flap_wasted_steals", waste["hist"], ceiling=1,
+            detail="steals wasted on the flapping replica")
+    # fixed FabricConfig => fully deterministic modeled makespans: the
+    # tightest drift detectors in the suite (a fabric/sched change that
+    # slows the modeled path moves these immediately)
+    _metric("flap_hist_scan2_us", span[("hist", 2)] * 1e6, better="lower")
+    _metric("flap_nohist_scan2_us", span[("nohist", 2)] * 1e6,
+            better="lower")
 
     # ---- shard safety: every candidate thief shard at its local quota
     ids = ["s0", "s1", "s2", "s3", "s4"]
@@ -544,18 +651,22 @@ _SCENARIOS = {"fig2": lambda transport: run(transport),
               "flap": lambda transport: run_flap()}
 
 
-def main() -> None:
+def main() -> int:
+    global _RUN
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--transport", choices=("rpc", "thallus", "both"),
                     default="both")
     ap.add_argument("--scenario", choices=(*_SCENARIOS, "all"),
                     default=None,
                     help="which axis to run (default: fig2, which itself "
-                    "appends the cluster axis; 'all' adds contention)")
+                    "appends the cluster axis; 'all' adds every other axis)")
     ap.add_argument("--cluster-only", action="store_true",
                     help="alias for --scenario cluster (back-compat)")
+    ap.add_argument("--json", metavar="DIR", default=None, dest="json_dir",
+                    help="append each scenario's run record "
+                    "(BENCH_<scenario>.json + trajectory.jsonl) to DIR; "
+                    "check it later with `python -m repro.obs.baseline DIR`")
     args = ap.parse_args()
-    print("name,us_per_call,derived")
     if args.cluster_only:
         scenarios = ["cluster"]
     elif args.scenario == "all":
@@ -566,10 +677,44 @@ def main() -> None:
         scenarios = [args.scenario]
     else:
         scenarios = ["fig2"]
+
+    cfg = calibrated_fabric().config
+    run_cfg = {"transport": args.transport,
+               "rpc_bw": cfg.rpc_bw, "rdma_bw": cfg.rdma_bw}
+    failures: list[tuple[str, str]] = []
+    print("name,us_per_call,derived")
     for name in scenarios:
-        for row in _SCENARIOS[name](args.transport):
+        _RUN = ScenarioRun(name, out_dir=args.json_dir, config=run_cfg)
+        try:
+            scenario_rows = _SCENARIOS[name](args.transport)
+        except AssertionError as exc:       # a hard invariant broke mid-run
+            failures.append((name, str(exc)))
+            _RUN = None
+            continue
+        except Exception as exc:            # noqa: BLE001 — keep going
+            failures.append((name, f"{type(exc).__name__}: {exc}"))
+            _RUN = None
+            continue
+        for row in scenario_rows:
             print(row.csv(), flush=True)
+        _record, events = _RUN.finalize()
+        _RUN = None
+        for event in events:
+            print(f"[{name}] {event}", file=sys.stderr)
+        regressions = [e for e in events if e.is_regression]
+        if regressions:
+            failures.append(
+                (name, f"{len(regressions)} regression(s): "
+                       + "; ".join(e.metric for e in regressions)))
+
+    # combined verdict (stderr: stdout is the CSV contract)
+    passed = len(scenarios) - len(failures)
+    print(f"bench: {passed}/{len(scenarios)} scenario(s) passed",
+          file=sys.stderr)
+    for name, why in failures:
+        print(f"  FAIL {name}: {why}", file=sys.stderr)
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,71 @@
+"""Export a Chrome trace of one traced gateway workload.
+
+Builds the qos contention fixture (heavy batch floods, interactive lookups
+behind it) on a 4-shard cluster, runs it through a ``ScanGateway`` wired to
+an ``obs.Tracer``, and writes every scan's spans — admission wait, WFQ queue
+wait, lease RPC, RDMA pull, prefetch overlap, reassembly — as Chrome
+``trace_event`` JSON. Load the output in ``chrome://tracing`` or
+https://ui.perfetto.dev; the per-(cat, span) aggregates print on stdout.
+
+    PYTHONPATH=src python scripts/export_trace.py --out artifacts/trace/scan_trace.json
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.cluster import ClusterCoordinator
+from repro.core import Fabric, FabricConfig, ThallusServer
+from repro.engine import Engine, make_numeric_table
+from repro.obs import Tracer
+from repro.qos import (AdmissionConfig, AdmissionController, ClientClass,
+                       ScanGateway, ScanRequest)
+from repro.utils.report import export_trace, trace_table
+
+ROWS = 1 << 16
+BATCH_ROWS = 1 << 13
+SHARDS = 4
+HEAVY_SQL = "SELECT c0, c1, c2, c3 FROM t"
+LIGHT_SQL = "SELECT c0 FROM t"
+
+
+def build_gateway(tracer: Tracer) -> ScanGateway:
+    coordinator = ClusterCoordinator()
+    for i in range(SHARDS):
+        coordinator.add_server(f"s{i}",
+                               ThallusServer(Engine(), Fabric(FabricConfig())))
+    coordinator.place_shards("/d", make_numeric_table(
+        "t", ROWS, 4, batch_rows=BATCH_ROWS))
+    admission = AdmissionController(AdmissionConfig(
+        max_streams_per_client=2, lease_rate_per_s=1e3, lease_burst=4))
+    return ScanGateway(
+        coordinator,
+        classes=[ClientClass("interactive", 4.0), ClientClass("batch", 1.0)],
+        admission=admission, tracer=tracer)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="artifacts/trace/scan_trace.json")
+    args = ap.parse_args()
+
+    tracer = Tracer()
+    gateway = build_gateway(tracer)
+    for _ in range(2):
+        gateway.submit(ScanRequest("heavy", "batch", HEAVY_SQL, "/d",
+                                   cost_hint=8.0))
+    for _ in range(3):
+        gateway.submit(ScanRequest("ui", "interactive", LIGHT_SQL, "/d",
+                                   cost_hint=1.0))
+    gateway.run()
+
+    path = export_trace(tracer, args.out)
+    events = sum(len(ctx.spans) for ctx in tracer.contexts)
+    print(trace_table(tracer))
+    print(f"\nwrote {events} events across {len(tracer.contexts)} scan(s) "
+          f"to {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

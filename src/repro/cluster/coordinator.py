@@ -113,23 +113,30 @@ class ClusterCoordinator:
 
     # ------------------------------------------------- stream lease lifecycle
     def open_stream(self, endpoint: Endpoint,
-                    client_id: str = "default") -> ScanHandle:
+                    client_id: str = "default", trace=None,
+                    now_s: float = 0.0) -> ScanHandle:
         """Open one stream lease; admission-gated when a controller is set
         (may raise ``qos.Backpressure`` with a retry-after hint). The check
         is routed to the endpoint server's quota shard when the controller
-        is sharded (``server_id=`` is ignored by a centralized one)."""
+        is sharded (``server_id=`` is ignored by a centralized one).
+        ``trace`` (an ``obs.StreamTrace``) gets a ``stream.open`` instant
+        at ``now_s`` on the stream's local clock."""
         if self.admission is not None:
             self.admission.acquire_stream(client_id,
                                           server_id=endpoint.server_id)
         try:
             server = self.server(endpoint.server_id)
-            return server.init_scan(endpoint.sql, endpoint.dataset,
-                                    start_batch=endpoint.start_batch)
+            handle = server.init_scan(endpoint.sql, endpoint.dataset,
+                                      start_batch=endpoint.start_batch)
         except BaseException:
             if self.admission is not None:
                 self.admission.release_stream(client_id,
                                               server_id=endpoint.server_id)
             raise
+        if trace is not None:
+            trace.instant("stream.open", now_s, cat="stream",
+                          server=endpoint.server_id)
+        return handle
 
     def admission_headroom(self, server_id: str,
                            client_id: str = "default") -> int | None:
@@ -173,12 +180,15 @@ class ClusterCoordinator:
 
     def close_stream(self, endpoint: Endpoint, uid: str,
                      client_id: str = "default",
-                     now_s: float | None = None) -> None:
+                     now_s: float | None = None, trace=None,
+                     trace_now_s: float = 0.0) -> None:
         """Release the lease and its admission slot. ``now_s`` is an
         optional timestamp on the admission controller's modeled timeline,
         forwarded to its freed-slot callbacks; leave it ``None`` when the
         caller has no clock on that timeline (listeners then stamp their
-        own — per-stream scan clocks do NOT qualify, they are relative)."""
+        own — per-stream scan clocks do NOT qualify, they are relative).
+        ``trace``/``trace_now_s`` record a ``stream.close`` instant on the
+        stream's own (relative) clock — a different timeline on purpose."""
         if self.admission is not None:
             self.admission.release_stream(client_id,
                                           server_id=endpoint.server_id,
@@ -186,6 +196,9 @@ class ClusterCoordinator:
         server = self.server(endpoint.server_id)
         if uid in server.reader_map:   # may already be reclaimed/evicted
             server.finalize(uid)
+        if trace is not None:
+            trace.instant("stream.close", trace_now_s, cat="stream",
+                          server=endpoint.server_id)
 
     def reclaim_stale(self, older_than_s: float) -> int:
         """Sweep abandoned leases across the whole cluster."""

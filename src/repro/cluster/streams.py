@@ -203,7 +203,8 @@ class StreamPuller:
 
     def __init__(self, coordinator: ClusterCoordinator, endpoint: Endpoint,
                  pool: BufferPool | None = None, max_resumes: int = 3,
-                 prefetch: bool = True, client_id: str = "default"):
+                 prefetch: bool = True, client_id: str = "default",
+                 trace=None):
         self.coordinator = coordinator
         self.endpoint = endpoint
         self.server = coordinator.server(endpoint.server_id)
@@ -211,12 +212,14 @@ class StreamPuller:
         self.max_resumes = max_resumes
         self.prefetch = prefetch
         self.client_id = client_id
+        self.trace = trace              # obs.StreamTrace, local-clock spans
         self.stats = StreamStats(server_id=endpoint.server_id)
         self.delivered = 0
         self.drained = False
         self.parked = False
         self._prefetch_budget_s = 0.0   # prior pull's wire time still hideable
-        self._handle = coordinator.open_stream(endpoint, client_id=client_id)
+        self._handle = coordinator.open_stream(endpoint, client_id=client_id,
+                                               trace=trace, now_s=0.0)
         self._lease_out: list[tuple[RecordBatch, bulk_mod.BulkHandle | None]] = []
 
     # ----------------------------------------------------------- remaining
@@ -260,6 +263,8 @@ class StreamPuller:
         self.parked = True
         self.stats.parks += 1
         self._prefetch_budget_s = 0.0    # the pipeline is cold after a park
+        if self.trace is not None:
+            self.trace.instant("stream.park", self.stats.clock_s, cat="sched")
         # no now_s: the stream clock is scan-relative, not on the admission
         # controller's timeline — release listeners stamp their own clocks
         self.coordinator.close_stream(self.endpoint, self._handle.uuid,
@@ -275,6 +280,9 @@ class StreamPuller:
         self._handle = self.coordinator.reopen_stream(
             self.endpoint, self.delivered, client_id=self.client_id)
         self.parked = False
+        if self.trace is not None:
+            self.trace.instant("stream.unpark", self.stats.clock_s,
+                               cat="sched")
 
     # ------------------------------------------------------------- do_rdma
     def _do_rdma(self, num_rows: int, sizes, remote: bulk_mod.BulkHandle
@@ -295,6 +303,26 @@ class StreamPuller:
         hidden = (min(rpc_s, self._prefetch_budget_s)
                   if self.prefetch and s.batches > 0 else 0.0)
         self._prefetch_budget_s = stats.wire.modeled_wire_s
+        if self.trace is not None:
+            # the spans partition this pull's clock advance exactly:
+            # rpc_u + alloc + rdma + assemble == stats.total_s + rpc_u
+            t0 = s.clock_s
+            rpc_u = rpc_s - hidden
+            wire_s = stats.wire.modeled_wire_s
+            self.trace.span("lease.rpc", t0, rpc_u, cat="lease",
+                            meta_bytes=meta_bytes)
+            self.trace.span("alloc", t0 + rpc_u, stats.alloc_s, cat="alloc")
+            self.trace.span("rdma.pull", t0 + rpc_u + stats.alloc_s, wire_s,
+                            cat="rdma", bytes=stats.wire.bytes_moved,
+                            segments=stats.wire.num_segments)
+            self.trace.span("assemble", t0 + rpc_u + stats.alloc_s + wire_s,
+                            stats.total_s - stats.alloc_s - wire_s,
+                            cat="assemble")
+            if hidden > 0.0:
+                # off the critical path: the slice of this batch's control
+                # RPC hidden under the previous pull, on its own lane
+                self.trace.span("prefetch.overlap", t0 - hidden, hidden,
+                                cat="prefetch", track_suffix=".prefetch")
         s.batches += 1
         s.bytes += stats.wire.bytes_moved
         s.segments += stats.wire.num_segments
@@ -335,6 +363,9 @@ class StreamPuller:
             # against the endpoint's own bucket shard.
             wait = admission.lease_wait_s(self.stats.clock_s, 1,
                                           server_id=self.endpoint.server_id)
+            if wait > 0.0 and self.trace is not None:
+                self.trace.span("admission.throttle", self.stats.clock_s,
+                                wait, cat="admission")
             self.stats.throttle_wait_s += wait
             self.stats.clock_s += wait
         self._lease_out = []
@@ -364,7 +395,9 @@ class StreamPuller:
                 self.parked = False
                 return
             self.coordinator.close_stream(self.endpoint, self._handle.uuid,
-                                          client_id=self.client_id)
+                                          client_id=self.client_id,
+                                          trace=self.trace,
+                                          trace_now_s=self.stats.clock_s)
 
 
 class MultiStreamPuller:
@@ -373,7 +406,8 @@ class MultiStreamPuller:
     def __init__(self, coordinator: ClusterCoordinator, plan: ScanPlan,
                  pool: BufferPool | None = None, lease_batches: int = 1,
                  schedule: str = "round_robin", max_resumes: int = 3,
-                 prefetch: bool = True, client_id: str = "default"):
+                 prefetch: bool = True, client_id: str = "default",
+                 trace=None):
         if schedule not in ("round_robin", "first_ready"):
             raise ValueError(f"unknown schedule {schedule!r}")
         self.coordinator = coordinator
@@ -385,19 +419,28 @@ class MultiStreamPuller:
                                if pool is not None else None)
         self.lease_batches = lease_batches
         self.schedule = schedule
+        self.trace = trace             # obs.TraceContext for the whole scan
         self.steal_events: list = []   # appended by repro.sched drivers
         self.pullers: list[StreamPuller] = []
         try:
-            for ep in plan.endpoints:
+            for i, ep in enumerate(plan.endpoints):
                 self.pullers.append(
                     StreamPuller(coordinator, ep, pool=pool,
                                  max_resumes=max_resumes, prefetch=prefetch,
-                                 client_id=client_id))
+                                 client_id=client_id,
+                                 trace=self._stream_trace(i, ep)))
         except BaseException:
             # an admission denial (or open failure) partway through the
             # fan-out must not leak the streams that did open
             self._abandon()
             raise
+
+    def _stream_trace(self, idx: int, endpoint: Endpoint):
+        """A per-stream child trace (own track + shift-group), or None
+        when the scan is untraced."""
+        if self.trace is None:
+            return None
+        return self.trace.stream(f"stream{idx}:{endpoint.server_id}")
 
     # ----------------------------------------------------------- iteration
     def batches(self) -> Iterator[tuple[int, RecordBatch]]:

@@ -71,6 +71,7 @@ class Fabric:
         self.bytes_over_rpc = 0
         self.bytes_over_rdma = 0
         self.registrations = 0         # segments pinned via register()
+        self.modeled_wire_s = 0.0      # cumulative wire time this fabric modeled
 
     # ------------------------------------------------------------------ RPC
     def rpc(self, payload_bytes: int = 0) -> WireStats:
@@ -78,6 +79,7 @@ class Fabric:
         self.rpc_count += 1
         self.bytes_over_rpc += payload_bytes
         wire = self.config.rpc_rtt_s + payload_bytes / self.config.rpc_bw
+        self.modeled_wire_s += wire
         return WireStats(bytes_moved=payload_bytes, num_segments=1,
                          modeled_wire_s=wire)
 
@@ -130,6 +132,7 @@ class Fabric:
         wire = (self.config.rdma_setup_s
                 + register_s
                 + nbytes / self.config.rdma_bw)
+        self.modeled_wire_s += wire
         return WireStats(bytes_moved=nbytes, num_segments=len(src),
                          measured_copy_s=copy_s, modeled_wire_s=wire,
                          modeled_register_s=register_s)
@@ -141,6 +144,7 @@ class Fabric:
         self.rpc_count += 1
         self.bytes_over_rpc += wire_buffer.nbytes
         wire = self.config.rpc_rtt_s + wire_buffer.nbytes / self.config.rpc_bw
+        self.modeled_wire_s += wire
         return WireStats(bytes_moved=int(wire_buffer.nbytes), num_segments=1,
                          modeled_wire_s=wire)
 
@@ -148,6 +152,7 @@ class Fabric:
         self.rpc_count = self.rdma_count = 0
         self.bytes_over_rpc = self.bytes_over_rdma = 0
         self.registrations = 0
+        self.modeled_wire_s = 0.0
 
 
 class FlappingFabric(Fabric):

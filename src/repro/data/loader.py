@@ -109,6 +109,20 @@ class ThallusLoader:
         self._stream_offsets: list[int] = []
         self._buffer: list[np.ndarray] = []    # leftover sequences
 
+    # -- telemetry ----------------------------------------------------------
+    def metrics(self) -> "MetricsRegistry":
+        """The loader-level telemetry roll-up: its own ``loader.*``
+        counters plus everything the gateway below it saw (``qos.*``,
+        ``sched.*``, ``cluster.*``, ``pool.*``) when one is attached —
+        one ``snapshot()`` for the whole data path."""
+        from ..obs.registry import (MetricsRegistry, record_gateway,
+                                    record_loader)
+        reg = MetricsRegistry()
+        record_loader(reg, self.stats)
+        if self.gateway is not None:
+            record_gateway(reg, self.gateway)
+        return reg
+
     # -- checkpointing ------------------------------------------------------
     def state_dict(self) -> dict:
         return {"batch_offset": self._offset,

@@ -100,6 +100,18 @@ class AdmissionController:
         """Concurrently open streams across every client."""
         return sum(self._active.values())
 
+    # ------------------------------------------------------------ telemetry
+    def metrics(self) -> "MetricsRegistry":
+        """This controller's counters plus live occupancy gauges, under
+        the ``qos.admission.*`` namespace of a fresh registry."""
+        from ..obs.registry import MetricsRegistry, record_admission
+        reg = MetricsRegistry()
+        record_admission(reg, self.stats)
+        reg.gauge("qos.admission.active_total", self.active_total())
+        for client_id, n in self._active.items():
+            reg.gauge(f"qos.admission.active.{client_id}", n)
+        return reg
+
     # Overridable limit hooks: the distributed layer's shards re-read these
     # from their borrow-adjusted local capacities; everything else in the
     # grant path is shared, so a one-shard deployment is grant-for-grant

@@ -189,18 +189,21 @@ class ScanGateway:
                  pool: BufferPool | None = None, fair: bool = True,
                  lease_batches: int = 1, prefetch: bool = True,
                  est_service_s_per_cost: float = 1e-4,
-                 scheduler: AdaptiveScheduler | None = None):
+                 scheduler: AdaptiveScheduler | None = None,
+                 tracer=None):
         self.coordinator = coordinator
         self.admission = admission
         self.pool = pool
         self.lease_batches = lease_batches
         self.prefetch = prefetch
         self.scheduler = scheduler
+        self.tracer = tracer            # obs.Tracer; None = tracing off
         self.queue = WeightedFairQueue(classes) if fair else FifoQueue()
         self.stats = QosStats()
         self.results: dict[int, ScanResult] = {}
         self.clock_s = 0.0
         self._next_id = 0
+        self._traces: dict[int, object] = {}   # request_id -> TraceContext
         # calibration: WFQ cost units -> modeled seconds, refined as we serve
         self._service_s_per_cost = est_service_s_per_cost
         # freed-slot events (modeled time, slots) awaiting an in-flight
@@ -314,14 +317,33 @@ class ScanGateway:
     def _ticket_key(self, request: ScanRequest):
         return (request.sql, request.dataset, request.start_batch)
 
-    def _make_puller(self, plan: ScanPlan,
-                     client_id: str) -> MultiStreamPuller:
+    def _make_puller(self, plan: ScanPlan, client_id: str,
+                     trace=None) -> MultiStreamPuller:
         kwargs = dict(pool=self.pool, lease_batches=self.lease_batches,
-                      prefetch=self.prefetch, client_id=client_id)
+                      prefetch=self.prefetch, client_id=client_id,
+                      trace=trace)
         if self.scheduler is not None:
             return self.scheduler.make_puller(self.coordinator, plan,
                                               **kwargs)
         return MultiStreamPuller(self.coordinator, plan, **kwargs)
+
+    # -------------------------------------------------------------- tracing
+    def _trace(self, request: ScanRequest):
+        return self._traces.get(request.request_id)
+
+    def _trace_close(self, request: ScanRequest, event: str | None = None,
+                     base_s: float | None = None) -> None:
+        """Commit a request's trace (idempotent) and drop it from the live
+        table. ``base_s`` places the scan-relative span groups (per-stream
+        clocks, steal epochs) at the grant instant on the gateway clock."""
+        ctx = self._traces.pop(request.request_id, None)
+        if ctx is None:
+            return
+        if base_s is not None:
+            ctx.base_s = base_s
+        if event is not None:
+            ctx.instant(event, self.clock_s, cat="gateway")
+        ctx.commit()
 
     # --------------------------------------------------------------- submit
     def submit(self, request: ScanRequest) -> ScanRequest | None:
@@ -342,6 +364,11 @@ class ScanGateway:
             if est_wait > request.deadline_s:
                 cstats.shed += 1
                 return None
+        if self.tracer is not None:
+            ctx = self.tracer.begin(f"scan-{request.request_id}")
+            ctx.instant("submit", request.arrival_s, cat="gateway",
+                        klass=request.klass, client=request.client_id)
+            self._traces[request.request_id] = ctx
         self.queue.push(request, request.klass, request.cost_hint)
         if self._tickets is not None:
             self._tickets.subscribe(self._ticket_key(request),
@@ -380,6 +407,7 @@ class ScanGateway:
                 if tickets is not None:   # a subscriber cancel
                     tickets.cancel(self._ticket_key(request),
                                    request.request_id)
+                self._trace_close(request, "shed")
                 continue
             if tickets is not None:
                 ticket = tickets.redeem(self._ticket_key(request),
@@ -398,6 +426,7 @@ class ScanGateway:
                 if tickets is not None:
                     tickets.cancel(self._ticket_key(request),
                                    request.request_id)
+                self._trace_close(request, "shed")
                 continue
             except Exception:
                 # one malformed request (bad SQL, unknown dataset, an
@@ -407,6 +436,7 @@ class ScanGateway:
                 if tickets is not None:
                     tickets.cancel(self._ticket_key(request),
                                    request.request_id)
+                self._trace_close(request, "failed")
                 continue
             if result is None:            # parked mid-scan; re-queued
                 continue
@@ -471,12 +501,21 @@ class ScanGateway:
         return adm.lease_wait_s(self.clock_s, len(plan.endpoints))
 
     def _execute(self, request: ScanRequest) -> ScanResult | None:
+        ctx = self._trace(request)
         plan, trim = self._plan(request)
+        queue_wait = self.clock_s - request.arrival_s
         if self.admission is not None:
             # one lease token per stream the fan-out opens
-            self.clock_s += self._charge_leases(plan)
+            lease_wait = self._charge_leases(plan)
+            if ctx is not None and lease_wait > 0.0:
+                ctx.span("admission.lease", self.clock_s, lease_wait,
+                         cat="admission", streams=len(plan.endpoints))
+            self.clock_s += lease_wait
+        if ctx is not None and queue_wait > 0.0:
+            ctx.span("queue.wait", request.arrival_s, queue_wait,
+                     cat="queue", klass=request.klass)
         grant_latency = self.clock_s - request.arrival_s
-        puller = self._make_puller(plan, request.client_id)
+        puller = self._make_puller(plan, request.client_id, trace=ctx)
         preempt = self._preempt
         if (preempt is not None and preempt.applies_to(request.klass)
                 and self._outweighed(request.klass)):
@@ -497,6 +536,10 @@ class ScanGateway:
         self.clock_s += service
         endpoints = tuple(p.endpoint for p in puller.pullers)
         batches = reassemble(plan, per_stream, endpoints)[trim:]
+        if ctx is not None:
+            ctx.span("reassemble", self.clock_s, 0.0, cat="gateway",
+                     batches=len(batches))
+            self._trace_close(request, base_s=grant_clock_s)
         return self._finalize(request, batches, cluster, grant_latency,
                               service)
 
@@ -523,6 +566,9 @@ class ScanGateway:
                 if self._tickets is not None:   # a subscriber cancel
                     self._tickets.cancel(self._ticket_key(request),
                                          request.request_id)
+                self._trace_close(request, "shed",
+                                  base_s=(request.arrival_s
+                                          + parked.grant_latency_s))
                 return None
         rounds = 0
         while not scan.done:
@@ -550,6 +596,13 @@ class ScanGateway:
         endpoints = tuple(p.endpoint for p in scan.puller.pullers)
         batches = reassemble(parked.plan, scan.per_stream,
                              endpoints)[parked.trim:]
+        ctx = self._trace(request)
+        if ctx is not None:
+            ctx.span("reassemble", self.clock_s, 0.0, cat="gateway",
+                     batches=len(batches))
+            self._trace_close(request,
+                              base_s=(request.arrival_s
+                                      + parked.grant_latency_s))
         return self._finalize(request, batches, cluster,
                               parked.grant_latency_s, service,
                               preemptions=scan.park_count)
@@ -568,6 +621,7 @@ class ScanGateway:
         cstats.grant_latency_s.append(grant_latency)
         cstats.bytes += getattr(ticket.cluster, "bytes", 0)
         cstats.batches += len(batches)
+        self._trace_close(request, "ticket.hit")
         return ScanResult(request, batches, ticket.cluster, grant_latency,
                           0.0, shared=True)
 

@@ -16,6 +16,8 @@ from __future__ import annotations
 import dataclasses
 from typing import TYPE_CHECKING
 
+from ..obs.registry import MetricsRegistry, record_qos
+
 if TYPE_CHECKING:   # avoid a hard qos -> cluster import edge for typing only
     from ..cluster.streams import ClusterStats
 
@@ -56,6 +58,25 @@ class ClassStats:
     def throughput_bytes_per_s(self) -> float:
         """Class throughput over the service time it actually consumed."""
         return self.bytes / self.service_s if self.service_s > 0 else 0.0
+
+    def merge(self, other: "ClassStats") -> "ClassStats":
+        """Fold another run's view of the same class into this one:
+        counters add, the latency samples concatenate (so merged
+        percentiles are computed over the union, not averaged)."""
+        if other.name != self.name:
+            raise ValueError(
+                f"cannot merge class {other.name!r} into {self.name!r}")
+        self.submitted += other.submitted
+        self.granted += other.granted
+        self.shed += other.shed
+        self.failed += other.failed
+        self.grant_latency_s.extend(other.grant_latency_s)
+        self.service_s += other.service_s
+        self.bytes += other.bytes
+        self.batches += other.batches
+        self.ticket_hits += other.ticket_hits
+        self.preemptions += other.preemptions
+        return self
 
 
 @dataclasses.dataclass
@@ -126,6 +147,37 @@ class QosStats:
         """Stolen tails reclaimed by their original victim after the thief
         degraded (one per range, by construction)."""
         return sum(c.re_steals for c in self.cluster)
+
+    def merge(self, other: "QosStats") -> "QosStats":
+        """Fold another gateway's (or run's) stats into this one. Classes
+        merge by name — disjoint class sets union cleanly; overlapping
+        classes combine via :meth:`ClassStats.merge`. Gauges take the max
+        (queue depth, makespan), durations/counters add, and the
+        per-request cluster list concatenates so steal attribution and
+        the registry roll-up keep seeing every fan-out. The admission
+        snapshot is kept from whichever side has one (self wins when
+        both do — admission controllers are shared, not additive)."""
+        for name, cstats in other.classes.items():
+            if name in self.classes:
+                self.classes[name].merge(cstats)
+            else:
+                self.classes[name] = cstats
+        self.queue_depth_max = max(self.queue_depth_max,
+                                   other.queue_depth_max)
+        self.throttle_wait_s += other.throttle_wait_s
+        self.makespan_s = max(self.makespan_s, other.makespan_s)
+        self.replans += other.replans
+        self.cluster.extend(other.cluster)
+        if self.admission is None:
+            self.admission = other.admission
+        return self
+
+    def registry(self) -> "MetricsRegistry":
+        """This stats object snapshotted into a fresh
+        :class:`~repro.obs.MetricsRegistry` (the ``qos.*`` namespace)."""
+        reg = MetricsRegistry()
+        record_qos(reg, self)
+        return reg
 
     def summary(self) -> str:
         """One benchmark-row string: the acceptance-criteria numbers."""

@@ -130,6 +130,10 @@ class PreemptibleScan:
         (``StreamPuller.delivered``)."""
         if self.parked:
             return
+        if self.puller.trace is not None:
+            self.puller.trace.instant("scan.park", self._clock_s(),
+                                      cat="sched", group="scan",
+                                      rounds=self.rounds)
         for puller in self.puller.pullers:
             puller.park()
         self.parked = True
@@ -152,6 +156,10 @@ class PreemptibleScan:
                 puller.park()
             raise
         self.parked = False
+        if self.puller.trace is not None:
+            self.puller.trace.instant("scan.resume", self._clock_s(),
+                                      cat="sched", group="scan",
+                                      rounds=self.rounds)
 
     # -------------------------------------------------------------- finish
     def abandon(self) -> None:

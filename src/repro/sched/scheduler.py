@@ -46,7 +46,9 @@ class AdaptiveScheduler:
         """The dataplane driver for one fan-out: a stealing puller when
         stealing is enabled, the plain static one otherwise. The shared
         ``history`` rides along so this scan's rate observations inform the
-        next scan's steal thresholds."""
+        next scan's steal thresholds. A ``trace=`` kwarg (an
+        ``obs.TraceContext`` from the gateway) passes through untouched —
+        the puller fans it out into per-stream child traces."""
         if self.steal is not None:
             return StealingPuller(coordinator, plan, steal=self.steal,
                                   history=self.history, **kwargs)

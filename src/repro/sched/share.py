@@ -77,6 +77,18 @@ class TicketTable:
     def lookup(self, key: TicketKey) -> Ticket | None:
         return self._tickets.get(key)
 
+    # ------------------------------------------------------------ telemetry
+    def metrics(self) -> "MetricsRegistry":
+        """This table's counters under the ``sched.tickets.*`` namespace of
+        a fresh registry, plus the live in-flight ticket count — the same
+        natural-root hook ``QosStats.registry()`` and
+        ``AdmissionController.metrics()`` expose."""
+        from ..obs.registry import MetricsRegistry, record_tickets
+        reg = MetricsRegistry()
+        record_tickets(reg, self.stats)
+        reg.gauge("sched.tickets.in_flight", len(self))
+        return reg
+
     # ------------------------------------------------------------ lifecycle
     def begin_drain(self) -> None:
         """Forget published results from earlier drains (data may have

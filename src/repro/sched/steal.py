@@ -476,15 +476,27 @@ class StealingPuller(MultiStreamPuller):
                epoch_s: float) -> StreamPuller | None:
         """Open a re-leased stream mirroring the source stream's transport
         options; ``None`` when admission denies the extra lease."""
+        stream_trace = self._stream_trace(len(self.pullers), endpoint)
         try:
             puller = StreamPuller(self.coordinator, endpoint, pool=self.pool,
                                   max_resumes=like.max_resumes,
                                   prefetch=like.prefetch,
-                                  client_id=like.client_id)
+                                  client_id=like.client_id,
+                                  trace=stream_trace)
         except Exception:
             return None
         puller.stats.start_s = epoch_s
+        if stream_trace is not None:
+            # place the thief's local clock at its spawn epoch on the scan
+            # timeline — its spans shift as a group at commit
+            self.trace.set_shift(stream_trace.group, epoch_s)
         return puller
+
+    def _trace_instant(self, name: str, at_s: float, **args) -> None:
+        """A steal-decision instant on the scan-level track (scan-relative
+        timeline: shifted by the gateway's grant clock at commit)."""
+        if self.trace is not None:
+            self.trace.instant(name, at_s, cat="steal", group="scan", **args)
 
     def _maybe_steal(self) -> Iterator[int]:
         """Run one straggler check; yields indices of new (thief) pullers."""
@@ -529,6 +541,8 @@ class StealingPuller(MultiStreamPuller):
                     epoch_s=idle[thief_sid], victim_eta_s=victim_eta,
                     median_eta_s=median_eta, kind="decline",
                     server_id=thief_sid))
+                self._trace_instant("steal.decline", idle[thief_sid],
+                                    victim=victim_sid, thief=thief_sid)
                 continue
             rate_t = self._thief_rate(thief_sid) or rate_v
             remaining = victim.remaining
@@ -555,6 +569,9 @@ class StealingPuller(MultiStreamPuller):
                 num_batches=endpoint.max_batches,
                 epoch_s=epoch, victim_eta_s=victim_eta,
                 median_eta_s=median_eta, server_id=thief_sid))
+            self._trace_instant("steal", epoch, victim=victim_sid,
+                                thief=thief_sid,
+                                batches=endpoint.max_batches)
             self.pullers.append(thief)
             if self.history is not None:
                 self.history.record_steal(victim_sid)
@@ -611,5 +628,9 @@ class StealingPuller(MultiStreamPuller):
                 victim_eta_s=self.tracker.eta_s(thief) or epoch,
                 median_eta_s=rate_v * remaining, kind="re_steal",
                 server_id=record.victim_sid))
+            self._trace_instant("steal.re_steal", epoch,
+                                victim=record.thief_sid,
+                                thief=record.victim_sid,
+                                batches=endpoint.max_batches)
             self.pullers.append(back)
             yield len(self.pullers) - 1

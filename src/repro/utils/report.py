@@ -80,38 +80,47 @@ def dryrun_table(arts: list[dict], mesh: str) -> str:
     return "\n".join(rows)
 
 
+def render_table(columns, rows) -> str:
+    """The one markdown table builder every ``*_table`` helper sits on:
+    a header row, the ``|---|`` separator, one row per cell list. Cells
+    are stringified as-is — formatting (units, precision) stays with the
+    callers, which own their stats' semantics."""
+    out = ["| " + " | ".join(str(c) for c in columns) + " |",
+           "|" + "---|" * len(columns)]
+    for row in rows:
+        out.append("| " + " | ".join(str(c) for c in row) + " |")
+    return "\n".join(out)
+
+
 def pool_table(stats) -> str:
     """One-row markdown table for a ``repro.cluster.PoolStats``."""
-    rows = ["| hit rate | hits | misses | slabs | resident MiB | "
-            "evictions | evicted MiB | registered segs | register us |",
-            "|---|---|---|---|---|---|---|---|---|",
-            f"| {stats.hit_rate:.2f} | {stats.hits} | {stats.misses} | "
-            f"{stats.slabs_created} | {stats.bytes_resident / 2**20:.2f} | "
-            f"{stats.evictions} | {stats.bytes_evicted / 2**20:.2f} | "
-            f"{stats.registered_segments} | "
-            f"{stats.modeled_register_s * 1e6:.1f} |"]
-    return "\n".join(rows)
+    return render_table(
+        ["hit rate", "hits", "misses", "slabs", "resident MiB",
+         "evictions", "evicted MiB", "registered segs", "register us"],
+        [[f"{stats.hit_rate:.2f}", stats.hits, stats.misses,
+          stats.slabs_created, f"{stats.bytes_resident / 2**20:.2f}",
+          stats.evictions, f"{stats.bytes_evicted / 2**20:.2f}",
+          stats.registered_segments,
+          f"{stats.modeled_register_s * 1e6:.1f}"]])
 
 
 def qos_table(qos) -> str:
     """Per-class markdown table for a ``repro.qos.QosStats`` (grant latency,
     sheds, throughput), with the gateway-level counters in a footer row."""
-    rows = ["| class | granted | shed | p50 grant ms | max grant ms | "
-            "throughput MB/s | bytes |",
-            "|---|---|---|---|---|---|---|"]
+    rows = []
     for name in sorted(qos.classes):
         c = qos.classes[name]
-        rows.append(
-            f"| {name} | {c.granted}/{c.submitted} | {c.shed} | "
-            f"{c.p50_grant_latency_s * 1e3:.3f} | "
-            f"{c.max_grant_latency_s * 1e3:.3f} | "
-            f"{c.throughput_bytes_per_s / 1e6:.1f} | {c.bytes} |")
-    rows.append(
-        f"| *gateway* | {qos.granted}/{qos.submitted} | {qos.shed} | "
-        f"depth_max={qos.queue_depth_max} | "
-        f"throttle={qos.throttle_wait_s * 1e3:.3f} | "
-        f"makespan={qos.makespan_s * 1e3:.3f} | {qos.bytes} |")
-    return "\n".join(rows)
+        rows.append([name, f"{c.granted}/{c.submitted}", c.shed,
+                     f"{c.p50_grant_latency_s * 1e3:.3f}",
+                     f"{c.max_grant_latency_s * 1e3:.3f}",
+                     f"{c.throughput_bytes_per_s / 1e6:.1f}", c.bytes])
+    rows.append(["*gateway*", f"{qos.granted}/{qos.submitted}", qos.shed,
+                 f"depth_max={qos.queue_depth_max}",
+                 f"throttle={qos.throttle_wait_s * 1e3:.3f}",
+                 f"makespan={qos.makespan_s * 1e3:.3f}", qos.bytes])
+    return render_table(
+        ["class", "granted", "shed", "p50 grant ms", "max grant ms",
+         "throughput MB/s", "bytes"], rows)
 
 
 def sched_table(qos) -> str:
@@ -119,22 +128,20 @@ def sched_table(qos) -> str:
     ``repro.qos.QosStats`` carries (steals / shared-ticket hits /
     preemptions), rendered alongside :func:`pool_table` / :func:`qos_table`.
     Duck-typed like its siblings so this module stays dependency-free."""
-    rows = ["| class | granted | ticket hits | preemptions | "
-            "p50 grant ms | service ms |",
-            "|---|---|---|---|---|---|"]
+    rows = []
     for name in sorted(qos.classes):
         c = qos.classes[name]
-        rows.append(
-            f"| {name} | {c.granted}/{c.submitted} | {c.ticket_hits} | "
-            f"{c.preemptions} | {c.p50_grant_latency_s * 1e3:.3f} | "
-            f"{c.service_s * 1e3:.3f} |")
+        rows.append([name, f"{c.granted}/{c.submitted}", c.ticket_hits,
+                     c.preemptions, f"{c.p50_grant_latency_s * 1e3:.3f}",
+                     f"{c.service_s * 1e3:.3f}"])
     hit_rate = qos.ticket_hits / qos.granted if qos.granted else 0.0
-    rows.append(
-        f"| *sched* | steals={qos.steals} | "
-        f"hit_rate={hit_rate:.2f} | preempt={qos.preemptions} | "
-        f"fanouts={len(qos.cluster)} | "
-        f"makespan={qos.makespan_s * 1e3:.3f} |")
-    return "\n".join(rows)
+    rows.append(["*sched*", f"steals={qos.steals}",
+                 f"hit_rate={hit_rate:.2f}", f"preempt={qos.preemptions}",
+                 f"fanouts={len(qos.cluster)}",
+                 f"makespan={qos.makespan_s * 1e3:.3f}"])
+    return render_table(
+        ["class", "granted", "ticket hits", "preemptions",
+         "p50 grant ms", "service ms"], rows)
 
 
 def steal_table(stats) -> str:
@@ -147,8 +154,6 @@ def steal_table(stats) -> str:
     clusters = getattr(stats, "cluster", None)
     if clusters is None:
         clusters = [stats]
-    rows = ["| shard | steals in | batches in | declines | re-steals in |",
-            "|---|---|---|---|---|"]
     agg: dict = {}
     for c in clusters:   # ClusterStats owns the per-event attribution rule
         for sid, per in c.steal_attribution().items():
@@ -156,12 +161,13 @@ def steal_table(stats) -> str:
             for key, count in per.items():
                 row[key] = row.get(key, 0) + count
     keys = ("steal", "batches", "decline", "re_steal")
-    for sid in sorted(agg):
-        cells = [agg[sid].get(k, 0) for k in keys]
-        rows.append("| {} | {} | {} | {} | {} |".format(sid, *cells))
-    totals = [sum(r.get(k, 0) for r in agg.values()) for k in keys]
-    rows.append("| *total* | {} | {} | {} | {} |".format(*totals))
-    return "\n".join(rows)
+    rows = [[sid] + [agg[sid].get(k, 0) for k in keys]
+            for sid in sorted(agg)]
+    rows.append(["*total*"] + [sum(r.get(k, 0) for r in agg.values())
+                               for k in keys])
+    return render_table(
+        ["shard", "steals in", "batches in", "declines", "re-steals in"],
+        rows)
 
 
 def admission_table(stats) -> str:
@@ -170,33 +176,54 @@ def admission_table(stats) -> str:
     with the cluster-wide aggregate in a footer row. Also accepts a plain
     ``AdmissionStats`` (centralized controller): one ``*global*`` row.
     Duck-typed like its siblings so this module stays dependency-free."""
-    rows = ["| shard | grants | denials (quota/total/mem) | borrows | "
-            "lends | reconciles | tokens in/out | throttle ms | peak |",
-            "|---|---|---|---|---|---|---|---|---|"]
+    columns = ["shard", "grants", "denials (quota/total/mem)", "borrows",
+               "lends", "reconciles", "tokens in/out", "throttle ms",
+               "peak"]
 
     def denials(s) -> str:
         return (f"{s.stream_denials}/{s.total_denials}/{s.memory_denials}")
 
     shards = getattr(stats, "shards", None)
     if not shards:
-        rows.append(
-            f"| *global* | {stats.stream_grants} | {denials(stats)} | — | — "
-            f"| — | — | {stats.throttle_wait_s * 1e3:.3f} | "
-            f"{stats.peak_active} |")
-        return "\n".join(rows)
+        return render_table(columns, [
+            ["*global*", stats.stream_grants, denials(stats), "—", "—",
+             "—", "—", f"{stats.throttle_wait_s * 1e3:.3f}",
+             stats.peak_active]])
+    rows = []
     for sid in sorted(shards):
         s = shards[sid]
-        rows.append(
-            f"| {sid} | {s.stream_grants} | {denials(s)} | {s.borrows} | "
-            f"{s.lends} | {s.reconciles} | "
-            f"{s.tokens_in:.1f}/{s.tokens_out:.1f} | "
-            f"{s.throttle_wait_s * 1e3:.3f} | {s.peak_active} |")
-    rows.append(
-        f"| *cluster* | {stats.stream_grants} | {denials(stats)} | "
-        f"{stats.borrows} | {stats.lends} | {stats.reconciles} | "
-        f"moved={stats.tokens_rebalanced:.1f} | "
-        f"{stats.throttle_wait_s * 1e3:.3f} | {stats.peak_total} |")
-    return "\n".join(rows)
+        rows.append([sid, s.stream_grants, denials(s), s.borrows, s.lends,
+                     s.reconciles, f"{s.tokens_in:.1f}/{s.tokens_out:.1f}",
+                     f"{s.throttle_wait_s * 1e3:.3f}", s.peak_active])
+    rows.append(["*cluster*", stats.stream_grants, denials(stats),
+                 stats.borrows, stats.lends, stats.reconciles,
+                 f"moved={stats.tokens_rebalanced:.1f}",
+                 f"{stats.throttle_wait_s * 1e3:.3f}", stats.peak_total])
+    return render_table(columns, rows)
+
+
+def trace_table(tracer) -> str:
+    """Per-(category, name) span aggregates for an ``obs.Tracer`` — count,
+    total and max modeled duration — the textual companion to the Chrome
+    trace export. Duck-typed on ``tracer.summary()`` so this module stays
+    dependency-free."""
+    rows = []
+    for (cat, name), agg in sorted(tracer.summary().items()):
+        rows.append([cat, name, agg["count"],
+                     f"{agg['total_s'] * 1e6:.1f}",
+                     f"{agg['max_s'] * 1e6:.1f}"])
+    return render_table(["cat", "span", "count", "total us", "max us"],
+                        rows)
+
+
+def export_trace(tracer, path: str) -> str:
+    """Write an ``obs.Tracer``'s collected scans as Chrome ``trace_event``
+    JSON (load in ``chrome://tracing`` or https://ui.perfetto.dev).
+    Returns ``path``. Duck-typed on ``tracer.to_chrome()``."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(tracer.to_chrome(), f)
+    return path
 
 
 def summary_stats(arts: list[dict]) -> dict:

@@ -1,0 +1,242 @@
+"""repro.obs: end-to-end scan tracing (spans sum to the modeled makespan,
+Chrome export shape), the unified metrics registry (stable dotted names,
+merge semantics, loader roll-up), and continuous perf baselining (rolling
+median+MAD envelopes, bootstrap floors, regression/improvement events)."""
+import json
+import types
+
+import pytest
+from conftest import make_coordinator, straggler_coordinator
+
+from repro.core import Fabric, ThallusServer
+from repro.data import ThallusLoader, make_token_table
+from repro.engine import Engine
+from repro.obs import (MIN_RUNS, MetricPolicy, MetricsRegistry, RunRecord,
+                       Tracer, append_run, detect_events, load_trajectory,
+                       rolling_baseline)
+from repro.qos import (AdmissionConfig, AdmissionController, ClientClass,
+                       ScanGateway, ScanRequest)
+from repro.sched import AdaptiveScheduler, StealConfig, TicketTable
+
+pytestmark = pytest.mark.obs
+
+SQL = "SELECT c0, c1 FROM t"
+
+
+def traced_gateway(num_servers: int = 1, **gateway_kwargs):
+    tracer = Tracer()
+    coord = make_coordinator(num_servers, "replica")
+    admission = AdmissionController(AdmissionConfig(
+        lease_rate_per_s=1e3, lease_burst=1))
+    gateway = ScanGateway(coord,
+                          classes=[ClientClass("interactive", 4.0),
+                                   ClientClass("batch", 1.0)],
+                          admission=admission, tracer=tracer,
+                          **gateway_kwargs)
+    return tracer, gateway
+
+
+# ---------------------------------------------------------------- tracing
+
+
+def test_trace_spans_sum_to_modeled_makespan():
+    """The acceptance criterion: one gateway scan's committed spans must
+    account for its whole modeled makespan (grant latency + service) within
+    1%. Prefetch spans are the overlap lane — hidden time, excluded."""
+    tracer, gateway = traced_gateway(1)
+    gateway.submit(ScanRequest("c", "interactive", SQL, "/d"))
+    gateway.run()
+
+    (ctx,) = tracer.contexts
+    qos = gateway.stats
+    expected = (qos.klass("interactive").grant_latency_s[0]
+                + qos.cluster[0].streams[0].clock_s)
+    spanned = sum(s.dur_s for s in ctx.spans
+                  if s.phase == "X" and s.cat != "prefetch")
+    assert expected > 0
+    assert spanned == pytest.approx(expected, rel=0.01)
+
+
+def test_chrome_export_shape(tmp_path):
+    tracer, gateway = traced_gateway(2)
+    for i in range(2):
+        gateway.submit(ScanRequest(f"c{i}", "interactive", SQL, "/d"))
+    gateway.run()
+
+    doc = tracer.to_chrome()
+    events = doc["traceEvents"]
+    assert {e["ph"] for e in events} <= {"X", "i", "M"}
+    assert len({e["pid"] for e in events}) == 2          # one pid per scan
+    for e in events:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0 and e["ts"] >= 0
+    names = {e["name"] for e in events}
+    assert {"submit", "lease.rpc", "rdma.pull", "reassemble"} <= names
+
+    from repro.utils.report import export_trace, trace_table
+    path = export_trace(tracer, str(tmp_path / "trace.json"))
+    assert json.load(open(path))["traceEvents"] == events
+    assert "rdma.pull" in trace_table(tracer)
+
+
+def test_trace_records_steal_instants():
+    """A stolen range shows up as a steal instant on the scan track and the
+    thief's spans land at the steal epoch, not t=0."""
+    from repro.sched import StealingPuller
+    coord = straggler_coordinator()
+    tracer = Tracer()
+    ctx = tracer.begin("scan")
+    puller = StealingPuller(coord, coord.plan(SQL, "/d"),
+                            steal=StealConfig(), trace=ctx)
+    stats = puller.run()
+    ctx.commit()
+    assert stats.steals >= 1
+    steal_instants = [s for s in ctx.spans
+                      if s.phase == "i" and s.name == "steal"]
+    assert len(steal_instants) == stats.steals
+    epoch = stats.steal_events[0].epoch_s
+    thief_track = f"stream{len(coord.plan(SQL, '/d').endpoints)}"
+    thief_spans = [s for s in ctx.spans
+                   if s.track.startswith(thief_track) and s.phase == "X"]
+    assert thief_spans and min(s.start_s for s in thief_spans) >= epoch
+
+
+# --------------------------------------------------------------- registry
+
+
+def test_registry_roundtrip_gateway_workload():
+    """registry() snapshots the whole gateway stack under the stable dotted
+    namespace, and every value is a plain scalar."""
+    from repro.cluster import BufferPool
+    coord = make_coordinator(2, "replica", slow=1, slowdown=4.0)
+    pool = BufferPool(coord.server("s0").fabric, max_bytes=1 << 15)
+    gateway = ScanGateway(
+        coord, classes=[ClientClass("interactive", 4.0)],
+        scheduler=AdaptiveScheduler(steal=StealConfig(),
+                                    tickets=TicketTable()),
+        pool=pool)
+    for i in range(2):
+        gateway.submit(ScanRequest(f"c{i}", "interactive", SQL, "/d"))
+    gateway.run()
+
+    snap = gateway.stats.registry().snapshot()
+    for key in ("qos.granted", "qos.grant_latency.p50", "qos.makespan.us",
+                "qos.class.interactive.granted", "sched.steals.decline",
+                "cluster.pull.us", "cluster.batches", "pool.evictions",
+                "pool.hit_rate"):
+        assert key in snap, key
+    assert all(isinstance(v, (int, float)) for v in snap.values())
+    assert snap["qos.granted"] == 2
+    assert snap["qos.grant_latency.p50"] >= 0
+
+
+def test_registry_counter_gauge_histogram_merge():
+    a = MetricsRegistry()
+    a.counter("x.n", 2)
+    a.gauge("x.g", 1.5)
+    a.histogram("x.h", [1.0, 2.0, 3.0])
+    b = MetricsRegistry()
+    b.counter("x.n", 3)
+    b.gauge("x.g", 2.5)
+    b.histogram("x.h", 4.0)
+    a.merge(b)
+    snap = a.snapshot()
+    assert snap["x.n"] == 5
+    assert snap["x.g"] == 2.5                 # gauges: latest wins
+    assert snap["x.h.count"] == 4             # histograms concatenate
+    assert snap["x.h.max"] == 4.0
+    assert snap["x.h.sum"] == pytest.approx(10.0)
+
+
+def test_loader_metrics_rollup():
+    eng = Engine()
+    eng.register("/d", make_token_table("tok", 64, 32, 100,
+                                        seqs_per_batch=16))
+    loader = ThallusLoader([ThallusServer(eng, Fabric())],
+                           "SELECT tokens FROM tok", "/d",
+                           seq_len=32, batch_seqs=8)
+    assert len(list(loader)) == 8
+    snap = loader.metrics().snapshot()
+    # loader.batches counts transport record batches (64 seqs / 16 per
+    # record batch), not the training batches the iterator re-cuts
+    assert snap["loader.batches"] == loader.stats.batches == 4
+    assert snap["loader.transport.us"] > 0
+
+
+def test_admission_metrics_gauges():
+    adm = AdmissionController(AdmissionConfig(max_streams_per_client=2))
+    adm.acquire_stream("c1")
+    adm.acquire_stream("c1")
+    snap = adm.metrics().snapshot()
+    assert snap["qos.admission.stream_grants"] == 2
+    assert snap["qos.admission.active_total"] == 2
+    assert snap["qos.admission.active.c1"] == 2
+
+
+# -------------------------------------------------------------- baselining
+
+
+def _record(scenario, **metrics):
+    return RunRecord(scenario=scenario, metrics=metrics)
+
+
+def test_rolling_baseline_median_mad():
+    history = [_record("s", m=v) for v in (10.0, 12.0, 11.0, 100.0)]
+    base = rolling_baseline(history, "m", window=3)     # drops the 10.0
+    assert base.n == 3
+    assert base.median == 12.0
+    lo, hi = base.envelope(rel_slack=0.10)
+    assert lo < 12.0 < hi
+
+
+def test_append_and_load_trajectory_roundtrip(tmp_path):
+    out = str(tmp_path)
+    append_run(out, _record("flap", speedup=1.7))
+    append_run(out, _record("flap", speedup=1.8))
+    append_run(out, _record("other", x=1.0))
+    runs = load_trajectory(out, "flap")
+    assert [r.metrics["speedup"] for r in runs] == [1.7, 1.8]
+    bench = json.load(open(tmp_path / "BENCH_flap.json"))
+    assert bench["metrics"]["speedup"] == 1.8            # newest record
+
+
+def test_bootstrap_floor_flags_regression_without_history():
+    policy = MetricPolicy("speedup", better="higher", floor=1.5)
+    events = detect_events(_record("s", speedup=1.2), [],
+                           {"speedup": policy})
+    assert [e.kind for e in events] == ["regression"]
+    assert "bootstrap floor" in events[0].detail
+
+
+def test_envelope_inactive_below_min_runs():
+    policy = MetricPolicy("us", better="lower")          # envelope-only
+    history = [_record("s", us=100.0)] * (MIN_RUNS - 1)
+    assert detect_events(_record("s", us=500.0), history,
+                         {"us": policy}) == []
+
+
+def test_injected_slowdown_flags_regression():
+    """The acceptance criterion: a stable 2-run trajectory passes, a 2×
+    slowdown on the third run is a regression event; a 2× speedup on a
+    better=higher metric is an improvement."""
+    policies = {"us": MetricPolicy("us", better="lower"),
+                "speedup": MetricPolicy("speedup", better="higher")}
+    history = [_record("s", us=100.0, speedup=1.7),
+               _record("s", us=101.0, speedup=1.72)]
+    assert detect_events(_record("s", us=102.0, speedup=1.69),
+                         history, policies) == []
+    events = detect_events(_record("s", us=201.0, speedup=3.4),
+                           history, policies)
+    kinds = {e.metric: e.kind for e in events}
+    assert kinds == {"us": "regression", "speedup": "improvement"}
+    assert all(e.n_runs == 2 for e in events)
+
+
+def test_ticket_table_metrics():
+    table = TicketTable()
+    key = table.key_for(SQL, "/d")
+    table.subscribe(key, 1)          # primary: runs the fan-out
+    table.subscribe(key, 2)          # rides the multicast
+    snap = table.metrics().snapshot()
+    assert snap["sched.tickets.in_flight"] == 1
+    assert snap["sched.tickets.hit_rate"] == table.stats.hit_rate

@@ -435,3 +435,81 @@ def test_report_tables_render():
     qt = qos_table(gateway.stats)
     assert "hit rate" in pt and pt.count("\n") == 2
     assert "interactive" in qt and "*gateway*" in qt
+
+
+# ------------------------------------------------- stats merge / attribution
+
+
+def test_qos_stats_merge_disjoint_classes():
+    from repro.qos import QosStats
+    a, b = QosStats(), QosStats()
+    ca = a.klass("interactive")
+    ca.submitted = ca.granted = 2
+    ca.grant_latency_s.extend([1e-3, 3e-3])
+    ca.bytes, ca.service_s = 100, 0.5
+    cb = b.klass("batch")
+    cb.submitted, cb.granted, cb.shed = 3, 2, 1
+    cb.bytes = 50
+    a.queue_depth_max, b.queue_depth_max = 2, 5
+    a.makespan_s, b.makespan_s = 0.4, 0.3
+    b.throttle_wait_s = 0.1
+    a.merge(b)
+    assert set(a.classes) == {"interactive", "batch"}     # clean union
+    assert a.submitted == 5 and a.granted == 4 and a.shed == 1
+    assert a.bytes == 150
+    assert a.queue_depth_max == 5                         # gauges: max
+    assert a.makespan_s == 0.4
+    assert a.throttle_wait_s == 0.1                       # durations: add
+    # the merged summary renders both classes without cross-talk
+    s = a.summary()
+    assert "interactive[n=2/2" in s and "batch[n=2/3" in s
+
+
+def test_qos_stats_merge_overlapping_class_percentiles():
+    from repro.qos import ClassStats
+    a = ClassStats("ui", submitted=2, granted=2,
+                   grant_latency_s=[1e-3, 2e-3])
+    b = ClassStats("ui", submitted=2, granted=2,
+                   grant_latency_s=[3e-3, 4e-3])
+    a.merge(b)
+    # percentiles come from the UNION of samples, not averaged p50s
+    # (_quantile takes the upper-middle sample of an even-length union)
+    assert a.grant_latency_s == [1e-3, 2e-3, 3e-3, 4e-3]
+    assert a.p50_grant_latency_s == 3e-3
+    assert a.max_grant_latency_s == 4e-3
+    with pytest.raises(ValueError):
+        a.merge(ClassStats("batch"))
+
+
+def test_qos_stats_zero_request_class_percentiles():
+    from repro.qos import QosStats
+    qos = QosStats()
+    empty = qos.klass("idle")                   # registered, never submitted
+    assert empty.p50_grant_latency_s == 0.0
+    assert empty.max_grant_latency_s == 0.0
+    assert empty.throughput_bytes_per_s == 0.0
+    assert "idle[n=0/0" in qos.summary()
+    # ...and the registry snapshot keeps the empty percentile keys present
+    snap = qos.registry().snapshot()
+    assert snap["qos.class.idle.grant_latency.count"] == 0
+    assert snap["qos.grant_latency.p50"] == 0.0
+
+
+def test_steal_attribution_legacy_events_without_server_id():
+    import types
+
+    from repro.cluster import ClusterStats
+    legacy = types.SimpleNamespace(kind="steal", victim="s3", thief="s0",
+                                   num_batches=2)       # pre-server_id event
+    tagged = types.SimpleNamespace(kind="decline", victim="s3", thief="s1",
+                                   server_id="s1", num_batches=1)
+    blank = types.SimpleNamespace(kind="re_steal", victim="s3", thief="s2",
+                                  server_id="", num_batches=1)  # empty tag
+    stats = ClusterStats(steal_events=[legacy, tagged, blank])
+    attr = stats.steal_attribution()
+    assert attr["s0"] == {"batches": 2, "steal": 1}     # backfilled: thief
+    assert attr["s1"] == {"batches": 0, "decline": 1}   # declines move none
+    assert attr["s2"] == {"batches": 1, "re_steal": 1}  # "" falls back too
+    from repro.utils.report import steal_table
+    st = steal_table(stats)
+    assert "| s0 |" in st and "*total*" in st

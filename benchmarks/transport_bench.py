@@ -43,6 +43,15 @@ checks:
   straggler's scan-2 modeled makespan with ≤ 1 wasted steal, and that a
   thief whose admission shard is at its local quota declines the stolen
   range (never over-admits) until a freed-slot event reopens the shard.
+* ``--scenario slo`` — the health/SLO/postmortem loop end to end: burn-rate
+  objectives calibrated on a clean fleet, then the straggler+flapper fabric
+  degradation from the flap scenario, heartbeat by heartbeat in modeled
+  time, with a low-rate interactive side-load riding along. Asserts the
+  clean phase fires ZERO alerts, the degradation pages within
+  ``SLO_HEARTBEAT_BUDGET`` heartbeats, the flight-recorder postmortem
+  bundle it dumps carries the causal ``steal`` / ``steal.decline`` events,
+  and the health monitor's quarantine verdicts agree with the
+  ``RateHistory``'s, server by server.
 
 Every judged number routes through the continuous-baselining layer
 (``repro.obs``): called directly the scenarios self-assert on the constants
@@ -79,8 +88,11 @@ from repro.qos import (AdmissionConfig, AdmissionController, Backpressure,
                        ScanRequest, ShardedAdmission)
 from repro.sched import (AdaptiveScheduler, RateHistory, StealConfig,
                          StealingPuller, TicketTable)
-from repro.obs import (MetricPolicy, RunRecord, append_run, current_git_sha,
-                       detect_events, load_trajectory)
+from repro.obs import (QUARANTINED, FlightRecorder, HealthMonitor,
+                       MetricPolicy, MetricsRegistry, RunRecord, SloEngine,
+                       SloObjective, Tracer, append_run, current_git_sha,
+                       detect_events, load_trajectory, record_cluster,
+                       record_health)
 
 TOTAL_COLS = 8
 CLUSTER_ROWS = 1 << 20
@@ -642,13 +654,237 @@ def run_flap() -> list[Row]:
     return rows
 
 
+SLO_HEARTBEAT_BUDGET = 8          # degraded heartbeats before paging is late
+SLO_POSTMORTEM_PATH = os.path.join("artifacts", "postmortem",
+                                   "slo_postmortem.json")
+
+
+def submit_side_load(gateway: ScanGateway, *, count: int = 2,
+                     client_id: str = "side") -> list[ScanRequest]:
+    """Low-rate interactive side-load mixin: a couple of light lookups
+    riding along each heartbeat's batch scan (off by default everywhere;
+    the slo scenario turns it on). Keeps the WFQ + admission machinery
+    exercised while the SLO engine watches the primary — and seeds the
+    ROADMAP's stress-workload-driver direction."""
+    reqs = []
+    for _ in range(count):
+        reqs.append(gateway.submit(ScanRequest(
+            client_id, "interactive", LIGHT_SQL, "/d", cost_hint=1.0,
+            arrival_s=gateway.clock_s, num_streams=2)))
+    return reqs
+
+
+def run_slo() -> list[Row]:
+    """Cluster health + SLO burn rate + flight-recorder postmortem, end to
+    end, self-asserting four ways.
+
+    The shape reuses the flap scenario's decision geometry: a 5-replica
+    cluster scanned on 3 streams behind the qos gateway, one persistent
+    straggler (``s2``, 4×) and one flapping replica (``s3``, 4×↔1× per
+    lease round) — but only in the *degraded* phase. A foreign tenant fills
+    one admission slot on every shard **except the flapper's**, so the
+    first steal lands on the flapper (and gets caught flapping →
+    rate-history quarantine) while later steal attempts on ``s4`` decline
+    at the local quota: both causal event kinds land in the flight
+    recorder. Phases, all on one modeled clock:
+
+    1. *Calibrate* (clean fleet): measure the clean modeled critical path
+       and the heartbeat spacing; derive burn-rate objectives from them.
+    2. *Clean verify*: more clean heartbeats through the armed engine —
+       must fire ZERO alerts (the false-positive gate).
+    3. *Degrade*: swap in the straggler+flapper fabrics and heartbeat until
+       the engine pages — within ``SLO_HEARTBEAT_BUDGET`` beats — then dump
+       the postmortem bundle (events + registry + health + trace) to
+       ``SLO_POSTMORTEM_PATH``.
+    4. *Conformance*: the health monitor's QUARANTINED verdicts must agree
+       with ``RateHistory.quarantined`` for every server.
+
+    Like flap, this runs on the FIXED paper-class ``FabricConfig``: every
+    assertion is about modeled decision geometry, and host-calibrated
+    bandwidth would move the burn-rate sample values between runs.
+    """
+    base = FabricConfig()
+    FLAP_SCHEDULE = (4.0, 1.0)
+    STRAGGLER, FLAPPER = "s2", "s3"
+    STRAGGLER_FACTOR = 4.0
+    EXPECTED_BATCHES = 24
+    ids = ["s0", "s1", "s2", "s3", "s4"]
+    table = make_numeric_table("t", EXPECTED_BATCHES * (1 << 13), 4,
+                               batch_rows=1 << 13)
+    sql = "SELECT c0, c1 FROM t"
+
+    # one observability spine across every phase: the flight recorder, the
+    # health monitor fed by it, the SLO engine, the cross-scan rate history
+    # and the tracer all outlive the per-phase gateways
+    recorder = FlightRecorder(capacity=512)
+    health = HealthMonitor(recorder=recorder)
+    engine = SloEngine()
+    history = RateHistory(quarantine_rounds=64)
+    tracer = Tracer()
+
+    def make_gateway(degraded: bool) -> ScanGateway:
+        admission = ShardedAdmission(
+            AdmissionConfig(max_streams_total=2 * len(ids)), ids,
+            dist=DistributedConfig(borrow_limit=0))
+        admission.recorder = recorder
+        coord = ClusterCoordinator(admission=admission, recorder=recorder,
+                                   health=health)
+        for sid in ("s0", "s1", "s4"):
+            coord.add_server(sid, ThallusServer(Engine(), Fabric(base)))
+        coord.add_server(STRAGGLER, ThallusServer(Engine(), FlappingFabric(
+            base, schedule=[STRAGGLER_FACTOR]) if degraded else Fabric(base)))
+        coord.add_server(FLAPPER, ThallusServer(Engine(), FlappingFabric(
+            base, schedule=FLAP_SCHEDULE) if degraded else Fabric(base)))
+        coord.place_replicas("/d", table)
+        # foreign tenant: one slot on every shard but the flapper's — the
+        # first steal lands on the (open) flapper, later thieves decline
+        for sid in ids:
+            if sid != FLAPPER:
+                admission.acquire_stream("foreign", server_id=sid)
+        scheduler = AdaptiveScheduler(
+            steal=StealConfig(steal_headroom_min=2), history=history)
+        health.bind(history=history, admission=admission)
+        return ScanGateway(
+            coord,
+            classes=[ClientClass("interactive", 4.0),
+                     ClientClass("batch", 1.0)],
+            scheduler=scheduler, tracer=tracer)
+
+    epoch_base = 0.0            # monotonic modeled time across gateways
+    last_reg = [MetricsRegistry()]   # the postmortem's registry snapshot
+
+    def beat(gateway: ScanGateway):
+        """One heartbeat: primary batch scan + interactive side-load →
+        drain → coordinator heartbeat → registry snapshot → SLO observe."""
+        req = gateway.submit(ScanRequest(
+            "primary", "batch", sql, "/d", cost_hint=8.0,
+            arrival_s=gateway.clock_s, num_streams=3))
+        submit_side_load(gateway)
+        gateway.run()
+        result = gateway.results[req.request_id]
+        now = epoch_base + gateway.clock_s
+        gateway.coordinator.heartbeat(now)
+        reg = MetricsRegistry()
+        record_cluster(reg, result.cluster)
+        record_health(reg, health)
+        reg.gauge("scan.delivered", float(len(result.batches)))
+        last_reg[0] = reg        # published before observe: an alert's
+        #                          postmortem sees THIS beat's snapshot
+        fired = engine.observe(now, reg.snapshot())
+        gateway.stats.alerts += len(fired)
+        return result, fired, now
+
+    rows: list[Row] = []
+
+    # ---- phase 1: calibrate on a clean fleet (engine unarmed: no samples)
+    gw = make_gateway(degraded=False)
+    clean_cp_us, ticks = [], []
+    for _ in range(3):
+        result, _, now = beat(gw)
+        clean_cp_us.append(result.cluster.modeled_critical_path_s * 1e6)
+        ticks.append(now)
+    clean_med_us = sorted(clean_cp_us)[len(clean_cp_us) // 2]
+    dt = (ticks[-1] - ticks[0]) / (len(ticks) - 1)
+    # 1.3×: clean beats sit ~30% under the target, the steal-mitigated
+    # degraded beats ~15% over — comfortable margin on BOTH sides of the
+    # threshold (1.5× left the first degraded beat within 0.3% of it)
+    target_us = 1.3 * clean_med_us
+    long_s, short_s = 40.0 * dt, 1.5 * dt
+    engine.add(SloObjective(
+        "scan-critical-path", "cluster.modeled_critical_path.us",
+        target=target_us, better="lower", goal=0.75,
+        windows=((long_s, 1.2), (short_s, 1.2)), min_samples=3))
+    engine.add(SloObjective(          # never fires: delivery stays complete
+        "delivery-completeness", "scan.delivered",
+        target=float(EXPECTED_BATCHES), better="higher", goal=0.75,
+        windows=((long_s, 1.2), (short_s, 1.2)), min_samples=3))
+
+    # ---- phase 2: clean verify — the armed engine must stay silent
+    for _ in range(4):
+        beat(gw)
+    false_alerts = len(engine.alerts)
+    epoch_base += gw.clock_s
+
+    # ---- phase 3: degrade and heartbeat until the engine pages
+    dumped: list[str] = []
+    engine.subscribe(lambda alert: dumped.append(recorder.dump(
+        SLO_POSTMORTEM_PATH, trigger=alert, registry=last_reg[0],
+        health=health, tracer=tracer)))
+    gw = make_gateway(degraded=True)
+    alert, alert_beat, degraded_cp_us = None, None, None
+    for hb in range(1, SLO_HEARTBEAT_BUDGET + 1):
+        result, fired, _ = beat(gw)
+        if degraded_cp_us is None:
+            degraded_cp_us = result.cluster.modeled_critical_path_s * 1e6
+        if fired:
+            alert, alert_beat = fired[0], hb
+            break
+
+    # ---- verdicts -------------------------------------------------------
+    assert alert is not None, (
+        f"SLO engine never paged within {SLO_HEARTBEAT_BUDGET} degraded "
+        f"heartbeats (clean median {clean_med_us:.1f}us, "
+        f"target {target_us:.1f}us)")
+    assert alert.objective == "scan-critical-path", (
+        f"wrong objective paged: {alert.objective}")
+    assert false_alerts == 0, (
+        f"{false_alerts} alert(s) fired on the CLEAN fleet")
+    counts = recorder.counts()
+    for kind in ("steal", "steal.decline"):
+        assert counts.get(kind, 0) >= 1, (
+            f"causal event {kind!r} missing from the flight recorder "
+            f"(counts={counts})")
+    for sid in ids:
+        agree = ((health.state(sid) == QUARANTINED)
+                 == bool(history.quarantined(sid)))
+        assert agree, (
+            f"health monitor and rate history disagree on {sid}: "
+            f"state={health.state(sid)} "
+            f"history.quarantined={history.quarantined(sid)}")
+    assert dumped and os.path.exists(dumped[0]), "postmortem never dumped"
+    import json as _json
+    with open(dumped[0]) as f:
+        bundle = _json.load(f)
+    for key in ("trigger", "events", "health", "registry", "trace"):
+        assert key in bundle, f"postmortem bundle missing {key!r}"
+    assert any(e["kind"] == "steal.decline" for e in bundle["events"]), \
+        "postmortem event window lost the causal steal.decline"
+
+    _metric("slo_alert_latency_heartbeats", alert_beat,
+            ceiling=SLO_HEARTBEAT_BUDGET, better="lower",
+            detail="degraded heartbeats until the burn-rate engine paged")
+    _metric("slo_false_alerts", false_alerts, ceiling=0,
+            detail="alerts fired during the clean-fleet verify phase")
+    # fixed FabricConfig => deterministic modeled paths: envelope drift bait
+    _metric("slo_clean_cp_us", clean_med_us, better="lower")
+    _metric("slo_degraded_cp_us", degraded_cp_us, better="lower")
+
+    rows.append(Row("slo_clean_cp_us", clean_med_us,
+                    f"heartbeats=7 target_us={target_us:.1f} "
+                    f"false_alerts={false_alerts}"))
+    rows.append(Row("slo_degraded_cp_us", degraded_cp_us,
+                    f"straggler={STRAGGLER_FACTOR:g}x "
+                    f"flap={FLAP_SCHEDULE[0]:g}x<->{FLAP_SCHEDULE[1]:g}x "
+                    f"steals={counts.get('steal', 0)} "
+                    f"declines={counts.get('steal.decline', 0)}"))
+    rows.append(Row(
+        "slo_alert_latency", float(alert_beat),
+        f"budget={SLO_HEARTBEAT_BUDGET} objective={alert.objective} "
+        f"value_us={alert.value:.1f} burns="
+        + "/".join(f"{b:.2f}" for b in alert.burns)
+        + f" quarantined={[s for s in ids if history.quarantined(s)]} "
+        f"postmortem={dumped[0]} events={len(bundle['events'])}"))
+    return rows
+
+
 _SCENARIOS = {"fig2": lambda transport: run(transport),
               "cluster": lambda transport: run_cluster(),
               "contention": lambda transport: run_contention(),
               "straggler": lambda transport: run_straggler(),
               "sharing": lambda transport: run_sharing(),
               "admission": lambda transport: run_admission(),
-              "flap": lambda transport: run_flap()}
+              "flap": lambda transport: run_flap(),
+              "slo": lambda transport: run_slo()}
 
 
 def main() -> int:
@@ -672,7 +908,7 @@ def main() -> int:
     elif args.scenario == "all":
         # fig2 already appends cluster
         scenarios = ["fig2", "contention", "straggler", "sharing",
-                     "admission", "flap"]
+                     "admission", "flap", "slo"]
     elif args.scenario is not None:
         scenarios = [args.scenario]
     else:

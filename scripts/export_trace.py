@@ -1,11 +1,21 @@
-"""Export a Chrome trace of one traced gateway workload.
+"""Export a Chrome trace of traced gateway workloads + the health/SLO lane.
 
-Builds the qos contention fixture (heavy batch floods, interactive lookups
-behind it) on a 4-shard cluster, runs it through a ``ScanGateway`` wired to
-an ``obs.Tracer``, and writes every scan's spans — admission wait, WFQ queue
-wait, lease RPC, RDMA pull, prefetch overlap, reassembly — as Chrome
-``trace_event`` JSON. Load the output in ``chrome://tracing`` or
-https://ui.perfetto.dev; the per-(cat, span) aggregates print on stdout.
+Phase 1 builds the qos contention fixture (heavy batch floods, interactive
+lookups behind it) on a 4-shard cluster and runs it through a ``ScanGateway``
+wired to an ``obs.Tracer``: every scan's spans — admission wait, WFQ queue
+wait, lease RPC, RDMA pull, prefetch overlap, reassembly — land as Chrome
+``trace_event`` JSON.
+
+Phase 2 reuses the slo benchmark's degraded geometry (a 5-replica scan with
+a persistent straggler, a flapping replica, and a foreign tenant pinning
+every admission shard but the flapper's) against the SAME tracer, flight
+recorder and health monitor, heartbeat by heartbeat, with a deliberately
+tight burn-rate objective so the demo always pages. Health transitions and
+SLO alerts are then embedded as **instant events** on dedicated ``health`` /
+``slo`` tracks, so the timeline shows the page next to the slow spans that
+caused it. Load the output in ``chrome://tracing`` or
+https://ui.perfetto.dev; per-(cat, span) aggregates and the health table
+print on stdout.
 
     PYTHONPATH=src python scripts/export_trace.py --out artifacts/trace/scan_trace.json
 """
@@ -15,18 +25,25 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.cluster import ClusterCoordinator
-from repro.core import Fabric, FabricConfig, ThallusServer
+from repro.core import Fabric, FabricConfig, FlappingFabric, ThallusServer
 from repro.engine import Engine, make_numeric_table
-from repro.obs import Tracer
+from repro.obs import (FlightRecorder, HealthMonitor, MetricsRegistry,
+                       SloEngine, SloObjective, Tracer, record_cluster,
+                       record_health)
 from repro.qos import (AdmissionConfig, AdmissionController, ClientClass,
-                       ScanGateway, ScanRequest)
-from repro.utils.report import export_trace, trace_table
+                       DistributedConfig, ScanGateway, ScanRequest,
+                       ShardedAdmission)
+from repro.sched import AdaptiveScheduler, RateHistory, StealConfig
+from repro.utils.report import export_trace, health_table, trace_table
 
 ROWS = 1 << 16
 BATCH_ROWS = 1 << 13
 SHARDS = 4
 HEAVY_SQL = "SELECT c0, c1, c2, c3 FROM t"
 LIGHT_SQL = "SELECT c0 FROM t"
+REPLICA_IDS = ["r0", "r1", "r2", "r3", "r4"]
+STRAGGLER, FLAPPER = "r2", "r3"     # r2 leased (sorted first 3), r3 idle
+HEARTBEATS = 4
 
 
 def build_gateway(tracer: Tracer) -> ScanGateway:
@@ -44,12 +61,51 @@ def build_gateway(tracer: Tracer) -> ScanGateway:
         admission=admission, tracer=tracer)
 
 
+def build_degraded_gateway(tracer: Tracer, recorder: FlightRecorder,
+                           health: HealthMonitor,
+                           history: RateHistory) -> ScanGateway:
+    """The slo benchmark's decision geometry, on the shared obs spine."""
+    base = FabricConfig()
+    admission = ShardedAdmission(
+        AdmissionConfig(max_streams_total=2 * len(REPLICA_IDS)), REPLICA_IDS,
+        dist=DistributedConfig(borrow_limit=0))
+    admission.recorder = recorder
+    coordinator = ClusterCoordinator(admission=admission, recorder=recorder,
+                                     health=health)
+    for sid in REPLICA_IDS:
+        if sid == STRAGGLER:
+            fabric = FlappingFabric(base, schedule=[4.0])
+        elif sid == FLAPPER:
+            fabric = FlappingFabric(base, schedule=(4.0, 1.0))
+        else:
+            fabric = Fabric(base)
+        coordinator.add_server(sid, ThallusServer(Engine(), fabric))
+    coordinator.place_replicas("/r", make_numeric_table(
+        "t", 24 * BATCH_ROWS, 4, batch_rows=BATCH_ROWS))
+    for sid in REPLICA_IDS:        # steals land on the flapper, decline on r4
+        if sid != FLAPPER:
+            admission.acquire_stream("foreign", server_id=sid)
+    health.bind(history=history, admission=admission)
+    return ScanGateway(
+        coordinator,
+        classes=[ClientClass("interactive", 4.0), ClientClass("batch", 1.0)],
+        scheduler=AdaptiveScheduler(
+            steal=StealConfig(steal_headroom_min=2), history=history),
+        tracer=tracer)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="artifacts/trace/scan_trace.json")
     args = ap.parse_args()
 
     tracer = Tracer()
+    recorder = FlightRecorder()
+    health = HealthMonitor(recorder=recorder)
+    history = RateHistory(quarantine_rounds=64)
+    engine = SloEngine()
+
+    # ---- phase 1: the contention fixture (spans only) ---------------------
     gateway = build_gateway(tracer)
     for _ in range(2):
         gateway.submit(ScanRequest("heavy", "batch", HEAVY_SQL, "/d",
@@ -59,10 +115,51 @@ def main() -> int:
                                    cost_hint=1.0))
     gateway.run()
 
+    # ---- phase 2: degraded replicas, heartbeat by heartbeat ---------------
+    degraded = build_degraded_gateway(tracer, recorder, health, history)
+    for hb in range(HEARTBEATS):
+        req = degraded.submit(ScanRequest(
+            "probe", "batch", "SELECT c0, c1 FROM t", "/r", cost_hint=8.0,
+            arrival_s=degraded.clock_s, num_streams=3))
+        degraded.run()
+        result = degraded.results[req.request_id]
+        now = degraded.clock_s
+        degraded.coordinator.heartbeat(now)
+        reg = MetricsRegistry()
+        record_cluster(reg, result.cluster)
+        record_health(reg, health)
+        if hb == 0:      # deliberately tight: the demo must page
+            engine.add(SloObjective(
+                "probe-critical-path", "cluster.modeled_critical_path.us",
+                target=0.95 * result.cluster.modeled_critical_path_s * 1e6,
+                better="lower", goal=0.75,
+                windows=((1e3, 1.2), (1.0, 1.2)), min_samples=3))
+        fired = engine.observe(now, reg.snapshot())
+        degraded.stats.alerts += len(fired)
+
+    # ---- the health/slo lane: transitions + alerts as instant events -----
+    lane = tracer.begin("health+slo")
+    for t in health.transitions:
+        lane.instant(f"{t.server_id}: {t.frm}->{t.to}", t.now_s,
+                     track="health", cat="health", reason=t.reason)
+    for alert in engine.alerts:
+        lane.instant(f"SLO page: {alert.objective}", alert.now_s,
+                     track="slo", cat="slo", value=alert.value,
+                     target=alert.target,
+                     burns=[round(b, 2) for b in alert.burns])
+    for sid, state in sorted(health.states().items()):
+        lane.instant(f"{sid}={state}", degraded.clock_s,
+                     track="health", cat="health", final=True)
+    lane.commit()
+
     path = export_trace(tracer, args.out)
     events = sum(len(ctx.spans) for ctx in tracer.contexts)
     print(trace_table(tracer))
-    print(f"\nwrote {events} events across {len(tracer.contexts)} scan(s) "
+    print()
+    print(health_table(health))
+    print(f"\nalerts={len(engine.alerts)} "
+          f"recorder_events={len(recorder)}")
+    print(f"wrote {events} events across {len(tracer.contexts)} context(s) "
           f"to {path}")
     return 0
 

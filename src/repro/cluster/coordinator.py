@@ -23,7 +23,15 @@ The coordinator is the control-plane brain the dataplane modules lean on:
   :class:`repro.qos.ShardedAdmission` meters each lease against that
   server's own quota shard (a centralized controller simply ignores the
   routing hint). The qos ``ScanGateway`` meters at request granularity
-  instead, so a gateway's coordinator runs without one.
+  instead, so a gateway's coordinator runs without one;
+* **observability funnel** — optional ``recorder`` (an
+  ``obs.FlightRecorder``) and ``health`` (an ``obs.HealthMonitor``), both
+  duck-typed. Every layer above and below reports its decisions through
+  :meth:`notify` (steal/decline, park/resume, shed, stream fault, ...) so
+  one attribute check on the coordinator fans the event out to the flight
+  recorder ring and the health monitor's window counters; :meth:`heartbeat`
+  advances the health state machine in modeled time. Plain deployments set
+  neither and pay two ``None`` checks per event.
 """
 from __future__ import annotations
 
@@ -43,10 +51,34 @@ class _Placement:
 class ClusterCoordinator:
     """Registry + lease lifecycle for a set of Thallus servers."""
 
-    def __init__(self, admission=None) -> None:
+    def __init__(self, admission=None, recorder=None, health=None) -> None:
         self.servers: dict[str, ThallusServer] = {}
         self.admission = admission
+        self.recorder = recorder       # obs.FlightRecorder (duck-typed)
+        self.health = health           # obs.HealthMonitor (duck-typed)
         self._placements: dict[str, _Placement] = {}
+
+    # ------------------------------------------------- observability funnel
+    def notify(self, kind: str, server_id: str = "", now_s: float = 0.0,
+               **attrs) -> None:
+        """Report one structured decision (``steal.decline``,
+        ``stream.fault``, ``qos.shed``, ...) to the attached flight
+        recorder and health monitor. A no-op when neither is attached."""
+        if self.recorder is not None:
+            self.recorder.record(kind, now_s=now_s, server_id=server_id,
+                                 **attrs)
+        if self.health is not None:
+            observe = getattr(self.health, "observe_event", None)
+            if observe is not None:
+                observe(kind, server_id, now_s)
+
+    def heartbeat(self, now_s: float) -> list:
+        """Advance the attached health monitor one heartbeat on the modeled
+        clock; returns the health transitions it produced ([] when no
+        monitor is attached)."""
+        if self.health is None:
+            return []
+        return self.health.heartbeat(now_s)
 
     # ------------------------------------------------------------ registry
     def add_server(self, server_id: str, server: ThallusServer) -> None:

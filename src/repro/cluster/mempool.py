@@ -105,6 +105,9 @@ class BufferPool:
         self._checked_out: dict[str, list[np.ndarray]] = {}
         self._lru_seq = 0
         self._release_seq: dict[int, int] = {}   # id(slab) -> release order
+        # optional obs.FlightRecorder (duck-typed): evictions land in the
+        # postmortem ring when one is attached
+        self.recorder = None
 
     # ----------------------------------------------------------- checkout
     def _slab(self, cls: int) -> np.ndarray:
@@ -165,6 +168,9 @@ class BufferPool:
         self.stats.registered_segments -= 1
         if self.fabric is not None:
             self.fabric.unregister(1)
+        if self.recorder is not None:
+            self.recorder.record("pool.eviction", nbytes=int(slab.nbytes),
+                                 resident=int(self.stats.bytes_resident))
 
     def _evict_over_budget(self) -> None:
         """LRU eviction: while resident bytes exceed the budget, drop the

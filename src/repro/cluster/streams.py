@@ -49,6 +49,15 @@ from .mempool import BufferPool, PoolStats
 from .plan import Endpoint, ScanPlan
 
 
+def notify_coordinator(coordinator, kind: str, **kw) -> None:
+    """Forward one decision to ``coordinator.notify`` when it exists — the
+    observability funnel is optional and coordinators are duck-typed in
+    tests, so emission sites never assume the method."""
+    notify = getattr(coordinator, "notify", None)
+    if notify is not None:
+        notify(kind, **kw)
+
+
 @dataclasses.dataclass
 class StreamStats:
     """Per-stream fabric-level counters + timing decomposition."""
@@ -265,6 +274,10 @@ class StreamPuller:
         self._prefetch_budget_s = 0.0    # the pipeline is cold after a park
         if self.trace is not None:
             self.trace.instant("stream.park", self.stats.clock_s, cat="sched")
+        notify_coordinator(self.coordinator, "stream.park",
+                           server_id=self.endpoint.server_id,
+                           now_s=self.stats.clock_s,
+                           delivered=self.delivered)
         # no now_s: the stream clock is scan-relative, not on the admission
         # controller's timeline — release listeners stamp their own clocks
         self.coordinator.close_stream(self.endpoint, self._handle.uuid,
@@ -283,6 +296,10 @@ class StreamPuller:
         if self.trace is not None:
             self.trace.instant("stream.unpark", self.stats.clock_s,
                                cat="sched")
+        notify_coordinator(self.coordinator, "stream.unpark",
+                           server_id=self.endpoint.server_id,
+                           now_s=self.stats.clock_s,
+                           delivered=self.delivered)
 
     # ------------------------------------------------------------- do_rdma
     def _do_rdma(self, num_rows: int, sizes, remote: bulk_mod.BulkHandle
@@ -381,6 +398,11 @@ class StreamPuller:
                 # resume just this stream where it died: batches that landed
                 # before the fault stay delivered, the lease pulls the rest
                 self.stats.resumes += 1
+                notify_coordinator(
+                    self.coordinator, "stream.fault",
+                    server_id=self.endpoint.server_id,
+                    now_s=self.stats.clock_s,
+                    delivered=self.delivered + len(self._lease_out))
                 self._handle = self.coordinator.resume_stream(
                     self.endpoint, self.delivered + len(self._lease_out))
         self.delivered += len(self._lease_out)

@@ -121,7 +121,25 @@ class ThallusLoader:
         record_loader(reg, self.stats)
         if self.gateway is not None:
             record_gateway(reg, self.gateway)
+        monitor = self._health_monitor()
+        if monitor is not None:
+            from ..obs.registry import record_health
+            record_health(reg, monitor)
         return reg
+
+    def health(self) -> dict:
+        """Per-server health verdicts from the cluster's
+        ``obs.HealthMonitor`` when one is attached to the gateway's
+        coordinator (``{server_id: "healthy" | "degraded" | "suspect" |
+        "quarantined"}``); ``{}`` when no monitor watches this data path."""
+        monitor = self._health_monitor()
+        if monitor is None:
+            return {}
+        return monitor.states()
+
+    def _health_monitor(self):
+        coordinator = getattr(self.gateway, "coordinator", None)
+        return getattr(coordinator, "health", None)
 
     # -- checkpointing ------------------------------------------------------
     def state_dict(self) -> dict:

@@ -21,7 +21,17 @@ rest of :mod:`repro`, so every other layer may import obs without cycles):
   ``BENCH_<scenario>.json`` run record appended to a trajectory;
   rolling baselines (median + MAD window) replace hand-tuned CI
   constants, which remain only as bootstrap floors while the trajectory
-  holds fewer than :data:`~repro.obs.baseline.MIN_RUNS` runs.
+  holds fewer than :data:`~repro.obs.baseline.MIN_RUNS` runs;
+* **health / SLO / postmortems** (:mod:`.health` + :mod:`.slo` +
+  :mod:`.recorder`) — a heartbeat-driven per-server
+  ``healthy → degraded → suspect → quarantined`` state machine over the
+  signals the stack already produces (:class:`HealthMonitor`),
+  declarative objectives over registry names with multi-window
+  burn-rate alerting in modeled time (:class:`SloEngine`), and a bounded
+  flight-recorder ring of structured cross-layer events
+  (:class:`FlightRecorder`) that dumps a postmortem bundle — causal
+  events + registry snapshot + health states + trace — when an alert
+  fires.
 """
 from __future__ import annotations
 
@@ -30,9 +40,15 @@ from .baseline import (  # noqa: F401
     load_trajectory, rolling_baseline,
 )
 from .events import MetricPolicy, PerfEvent, detect_events  # noqa: F401
+from .health import (  # noqa: F401
+    DEGRADED, HEALTHY, QUARANTINED, STATES, SUSPECT, HealthConfig,
+    HealthMonitor, HealthTransition, ServerHealth,
+)
+from .recorder import FlightEvent, FlightRecorder  # noqa: F401
 from .registry import (  # noqa: F401
     MetricsRegistry, record_admission, record_any, record_cluster,
-    record_fabric, record_gateway, record_loader, record_pool, record_qos,
-    record_tickets,
+    record_fabric, record_gateway, record_health, record_loader,
+    record_pool, record_qos, record_tickets,
 )
+from .slo import SloAlert, SloEngine, SloObjective  # noqa: F401
 from .trace import Span, StreamTrace, TraceContext, Tracer  # noqa: F401

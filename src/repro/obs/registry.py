@@ -46,12 +46,17 @@ class MetricsRegistry:
         self.gauges[name] = float(value)
 
     def histogram(self, name: str, value) -> None:
-        """Record one observation, or extend with an iterable of them."""
+        """Record one observation, or extend with an iterable of them.
+        Non-numeric observations are skipped (the registry is a telemetry
+        sink — it must never take the caller down)."""
         bucket = self.histograms.setdefault(name, [])
-        try:
-            bucket.extend(float(v) for v in value)
-        except TypeError:
-            bucket.append(float(value))
+        if isinstance(value, (str, bytes)) or not hasattr(value, "__iter__"):
+            value = (value,)
+        for v in value:
+            try:
+                bucket.append(float(v))
+            except (TypeError, ValueError):
+                continue
 
     def merge(self, other: "MetricsRegistry") -> "MetricsRegistry":
         """Fold ``other`` into self: counters add, gauges take the latest,
@@ -204,6 +209,7 @@ def record_qos(reg: MetricsRegistry, qos_stats,
                 sum(c.batches for c in q.classes.values()))
     reg.counter(f"{prefix}.ticket_hits", q.ticket_hits)
     reg.counter(f"{prefix}.preemptions", q.preemptions)
+    reg.counter(f"{prefix}.alerts", getattr(q, "alerts", 0))
     reg.gauge(f"{prefix}.queue_depth.max", q.queue_depth_max)
     _us(reg, f"{prefix}.makespan.us", q.makespan_s)
     _us(reg, f"{prefix}.throttle_wait.us", q.throttle_wait_s)
@@ -257,6 +263,23 @@ def record_loader(reg: MetricsRegistry, loader_stats,
     _us(reg, f"{prefix}.transport.us", s.transport_s)
 
 
+def record_health(reg: MetricsRegistry, monitor,
+                  prefix: str = "health") -> None:
+    """``repro.obs.HealthMonitor`` → ``health.*``: per-server state level
+    (0=healthy .. 3=quarantined) as a gauge, transition totals as
+    counters, plus the cluster-wide pool-pressure gauge."""
+    snap = monitor.snapshot()
+    reg.gauge(f"{prefix}.heartbeats", snap.get("heartbeats", 0))
+    reg.gauge(f"{prefix}.pool_pressure", snap.get("pool_pressure", 0.0))
+    levels = {"healthy": 0, "degraded": 1, "suspect": 2, "quarantined": 3}
+    for sid, h in snap.get("servers", {}).items():
+        sp = f"{prefix}.server.{sid}"
+        reg.gauge(f"{sp}.level", levels.get(h.get("state"), 0))
+        reg.counter(f"{sp}.transitions", h.get("transitions", 0))
+        reg.counter(f"{sp}.faults", h.get("faults", 0))
+        reg.counter(f"{sp}.declines", h.get("declines", 0))
+
+
 def record_gateway(reg: MetricsRegistry, gateway) -> None:
     """Everything a ``ScanGateway`` can see: its ``QosStats`` roll-up plus
     the shared-ticket table and buffer pool when attached."""
@@ -269,12 +292,20 @@ def record_gateway(reg: MetricsRegistry, gateway) -> None:
         record_pool(reg, gateway.pool.stats)
 
 
-def record_any(reg: MetricsRegistry, prefix: str, obj) -> None:
+#: recursion ceiling for :func:`record_any` — deep enough for any real
+#: ``*Stats`` nesting, shallow enough to stop self-referential objects
+#: (an ndarray's ``.T`` is a fresh ndarray, forever).
+_ANY_MAX_DEPTH = 8
+
+
+def record_any(reg: MetricsRegistry, prefix: str, obj,
+               _depth: int = 0) -> None:
     """Generic fallback: walk any ``*Stats`` dataclass (or dict / list of
     them) and record every numeric leaf as a gauge under ``prefix`` —
     proves the whole stats surface round-trips through the registry even
-    for classes without a bespoke recorder."""
-    if obj is None or isinstance(obj, str):
+    for classes without a bespoke recorder. Non-numeric / ``None`` leaves
+    and unrecognizably exotic objects are skipped, never raised on."""
+    if obj is None or isinstance(obj, (str, bytes)):
         return
     if isinstance(obj, bool):
         reg.gauge(prefix, float(obj))
@@ -282,9 +313,11 @@ def record_any(reg: MetricsRegistry, prefix: str, obj) -> None:
     if isinstance(obj, (int, float)):
         reg.gauge(prefix, float(obj))
         return
+    if _depth >= _ANY_MAX_DEPTH:
+        return
     if isinstance(obj, dict):
         for k, v in obj.items():
-            record_any(reg, f"{prefix}.{k}", v)
+            record_any(reg, f"{prefix}.{k}", v, _depth + 1)
         return
     if isinstance(obj, (list, tuple)):
         if obj and all(isinstance(v, (int, float)) and
@@ -292,13 +325,28 @@ def record_any(reg: MetricsRegistry, prefix: str, obj) -> None:
             reg.histogram(prefix, obj)
         else:
             for i, v in enumerate(obj):
-                record_any(reg, f"{prefix}.{i}", v)
+                record_any(reg, f"{prefix}.{i}", v, _depth + 1)
         return
     if dataclasses.is_dataclass(obj):
         for f in dataclasses.fields(obj):
-            record_any(reg, f"{prefix}.{f.name}", getattr(obj, f.name))
+            try:
+                v = getattr(obj, f.name)
+            except Exception:
+                continue
+            record_any(reg, f"{prefix}.{f.name}", v, _depth + 1)
         return
-    # non-dataclass object (e.g. AdmissionStats-like): public attrs only
+    # numeric-like scalar (numpy scalar, Decimal, ...): gauge if it converts
+    try:
+        reg.gauge(prefix, float(obj))
+        return
+    except (TypeError, ValueError):
+        pass
+    # non-dataclass object (e.g. AdmissionStats-like): walk public attrs,
+    # but only for plain attribute-bag objects — property-heavy extension
+    # types (ndarrays et al.) synthesize fresh objects per access and
+    # would recurse without converging.
+    if not hasattr(obj, "__dict__"):
+        return
     for name in dir(obj):
         if name.startswith("_"):
             continue
@@ -308,4 +356,4 @@ def record_any(reg: MetricsRegistry, prefix: str, obj) -> None:
             continue
         if callable(v):
             continue
-        record_any(reg, f"{prefix}.{name}", v)
+        record_any(reg, f"{prefix}.{name}", v, _depth + 1)

@@ -191,6 +191,9 @@ class ShardedAdmission:
         self._tokens_rebalanced = 0.0
         self._peak_total = 0
         self._client_peaks: dict[str, int] = {}
+        # optional obs.FlightRecorder (duck-typed): borrow/reconcile events
+        # land in the postmortem ring when one is attached
+        self.recorder = None
 
     @classmethod
     def for_coordinator(cls, coordinator,
@@ -346,6 +349,10 @@ class ShardedAdmission:
             shard._total_adjust = held + 1
         lender.stats.lends += 1
         shard.stats.borrows += 1
+        if self.recorder is not None:
+            self.recorder.record("admission.borrow",
+                                 server_id=shard.server_id,
+                                 lender=lender.server_id, reason=reason)
         return lender
 
     def _unborrow(self, shard: AdmissionShard, lender: AdmissionShard,
@@ -443,6 +450,12 @@ class ShardedAdmission:
         else:
             report.tokens_before = report.tokens_after = sum(
                 s.tokens_at(now_s) for s in shards)
+        if self.recorder is not None:
+            self.recorder.record(
+                "admission.reconcile", now_s=now_s,
+                participants=len(ids),
+                capacity_returned=report.capacity_returned,
+                tokens_moved=report.tokens_moved)
         return report
 
     def _rebalance_capacity(self, shards: list[AdmissionShard]) -> int:

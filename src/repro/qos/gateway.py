@@ -60,7 +60,8 @@ import weakref
 from ..cluster.mempool import BufferPool
 from ..cluster.plan import Endpoint, ScanPlan
 from ..cluster.coordinator import ClusterCoordinator
-from ..cluster.streams import ClusterStats, MultiStreamPuller
+from ..cluster.streams import (ClusterStats, MultiStreamPuller,
+                               notify_coordinator)
 from ..core.recordbatch import RecordBatch
 from ..sched import AdaptiveScheduler, PreemptibleScan, Ticket
 from .admission import AdmissionController, Backpressure
@@ -363,6 +364,10 @@ class ScanGateway:
                         * self._service_s_per_cost)
             if est_wait > request.deadline_s:
                 cstats.shed += 1
+                notify_coordinator(self.coordinator, "qos.shed",
+                                   now_s=self.clock_s, klass=request.klass,
+                                   client=request.client_id,
+                                   reason="deadline-at-submit")
                 return None
         if self.tracer is not None:
             ctx = self.tracer.begin(f"scan-{request.request_id}")
@@ -408,6 +413,10 @@ class ScanGateway:
                     tickets.cancel(self._ticket_key(request),
                                    request.request_id)
                 self._trace_close(request, "shed")
+                notify_coordinator(self.coordinator, "qos.shed",
+                                   now_s=self.clock_s, klass=request.klass,
+                                   client=request.client_id,
+                                   reason="deadline-in-queue")
                 continue
             if tickets is not None:
                 ticket = tickets.redeem(self._ticket_key(request),
@@ -427,6 +436,9 @@ class ScanGateway:
                     tickets.cancel(self._ticket_key(request),
                                    request.request_id)
                 self._trace_close(request, "shed")
+                notify_coordinator(self.coordinator, "qos.backpressure",
+                                   now_s=self.clock_s, klass=request.klass,
+                                   client=request.client_id)
                 continue
             except Exception:
                 # one malformed request (bad SQL, unknown dataset, an
@@ -437,6 +449,9 @@ class ScanGateway:
                     tickets.cancel(self._ticket_key(request),
                                    request.request_id)
                 self._trace_close(request, "failed")
+                notify_coordinator(self.coordinator, "qos.failed",
+                                   now_s=self.clock_s, klass=request.klass,
+                                   client=request.client_id)
                 continue
             if result is None:            # parked mid-scan; re-queued
                 continue
@@ -569,6 +584,10 @@ class ScanGateway:
                 self._trace_close(request, "shed",
                                   base_s=(request.arrival_s
                                           + parked.grant_latency_s))
+                notify_coordinator(self.coordinator, "qos.backpressure",
+                                   now_s=self.clock_s, klass=request.klass,
+                                   client=request.client_id,
+                                   reason="resume-denied")
                 return None
         rounds = 0
         while not scan.done:

@@ -90,6 +90,8 @@ class QosStats:
     makespan_s: float = 0.0             # gateway clock when the queue drained
     replans: int = 0                    # freed-slot events that widened a
     #                                     quota-capped in-flight fan-out
+    alerts: int = 0                     # SLO burn-rate alerts fired against
+    #                                     this gateway's heartbeat snapshots
     cluster: list["ClusterStats"] = dataclasses.field(default_factory=list)
     # admission snapshot (duck-typed: AdmissionStats, or the sharded
     # DistributedStats whose .shards dict carries per-shard grant/denial/
@@ -167,6 +169,7 @@ class QosStats:
         self.throttle_wait_s += other.throttle_wait_s
         self.makespan_s = max(self.makespan_s, other.makespan_s)
         self.replans += other.replans
+        self.alerts += getattr(other, "alerts", 0)
         self.cluster.extend(other.cluster)
         if self.admission is None:
             self.admission = other.admission
@@ -194,6 +197,8 @@ class QosStats:
                          f"re_steals={self.re_steals}")
         if self.replans:
             parts.append(f"replans={self.replans}")
+        if self.alerts:
+            parts.append(f"alerts={self.alerts}")
         shards = getattr(self.admission, "shards", None)
         if shards:
             agg = self.admission

@@ -27,7 +27,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from ..cluster.streams import ClusterStats, MultiStreamPuller
+from ..cluster.streams import (ClusterStats, MultiStreamPuller,
+                               notify_coordinator)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +139,8 @@ class PreemptibleScan:
             puller.park()
         self.parked = True
         self.park_count += 1
+        notify_coordinator(self.puller.coordinator, "scan.park",
+                           now_s=self._clock_s(), rounds=self.rounds)
 
     def resume(self) -> None:
         """Re-open every parked stream where it stopped. May raise
@@ -160,6 +163,8 @@ class PreemptibleScan:
             self.puller.trace.instant("scan.resume", self._clock_s(),
                                       cat="sched", group="scan",
                                       rounds=self.rounds)
+        notify_coordinator(self.puller.coordinator, "scan.resume",
+                           now_s=self._clock_s(), rounds=self.rounds)
 
     # -------------------------------------------------------------- finish
     def abandon(self) -> None:

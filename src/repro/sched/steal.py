@@ -64,7 +64,8 @@ import weakref
 from typing import Iterator
 
 from ..cluster.plan import Endpoint
-from ..cluster.streams import MultiStreamPuller, StreamPuller
+from ..cluster.streams import (MultiStreamPuller, StreamPuller,
+                               notify_coordinator)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -543,6 +544,10 @@ class StealingPuller(MultiStreamPuller):
                     server_id=thief_sid))
                 self._trace_instant("steal.decline", idle[thief_sid],
                                     victim=victim_sid, thief=thief_sid)
+                notify_coordinator(self.coordinator, "steal.decline",
+                                   server_id=thief_sid,
+                                   now_s=idle[thief_sid], victim=victim_sid,
+                                   headroom=headroom)
                 continue
             rate_t = self._thief_rate(thief_sid) or rate_v
             remaining = victim.remaining
@@ -572,6 +577,10 @@ class StealingPuller(MultiStreamPuller):
             self._trace_instant("steal", epoch, victim=victim_sid,
                                 thief=thief_sid,
                                 batches=endpoint.max_batches)
+            notify_coordinator(self.coordinator, "steal",
+                               server_id=thief_sid, now_s=epoch,
+                               victim=victim_sid,
+                               batches=endpoint.max_batches)
             self.pullers.append(thief)
             if self.history is not None:
                 self.history.record_steal(victim_sid)
@@ -632,5 +641,9 @@ class StealingPuller(MultiStreamPuller):
                                 victim=record.thief_sid,
                                 thief=record.victim_sid,
                                 batches=endpoint.max_batches)
+            notify_coordinator(self.coordinator, "steal.re_steal",
+                               server_id=record.victim_sid, now_s=epoch,
+                               victim=record.thief_sid,
+                               batches=endpoint.max_batches)
             self.pullers.append(back)
             yield len(self.pullers) - 1

@@ -216,6 +216,31 @@ def trace_table(tracer) -> str:
                         rows)
 
 
+def health_table(monitor) -> str:
+    """Per-server health verdicts for an ``obs.HealthMonitor`` — state,
+    when it last changed, the signals behind it — plus the cluster-wide
+    pool-pressure/heartbeat footer. Duck-typed on ``monitor.snapshot()``
+    so this module stays dependency-free."""
+    snap = monitor.snapshot()
+    rows = []
+    for sid, h in snap.get("servers", {}).items():
+        rate = h.get("rate_us_per_batch")
+        rows.append([
+            sid, h.get("state", "?"),
+            f"{h.get('since_s', 0.0) * 1e3:.3f}",
+            "-" if rate is None else f"{rate:.1f}",
+            h.get("flaps", 0), h.get("faults", 0), h.get("denials", 0),
+            h.get("declines", 0), h.get("transitions", 0),
+            h.get("reason", ""),
+        ])
+    table = render_table(
+        ["server", "state", "since ms", "rate us/b", "flaps", "faults",
+         "denials", "declines", "trans", "reason"], rows)
+    footer = (f"heartbeats={snap.get('heartbeats', 0)} "
+              f"pool_pressure={snap.get('pool_pressure', 0.0):.2f}")
+    return f"{table}\n{footer}"
+
+
 def export_trace(tracer, path: str) -> str:
     """Write an ``obs.Tracer``'s collected scans as Chrome ``trace_event``
     JSON (load in ``chrome://tracing`` or https://ui.perfetto.dev).

@@ -173,6 +173,71 @@ def test_admission_metrics_gauges():
     assert snap["qos.admission.active.c1"] == 2
 
 
+def test_registry_hardened_against_empty_and_non_numeric():
+    """Regression: empty histograms snapshot safely, non-numeric histogram
+    elements are skipped, and record_any never raises on awkward objects."""
+    from repro.obs.registry import _quantile, record_any
+    assert _quantile([], 0.5) == 0.0
+    reg = MetricsRegistry()
+    reg.histogram("h.empty", [])
+    reg.histogram("h.mixed", [1.0, "n/a", None, 3.0])
+    reg.histogram("h.scalar", "not-a-number")
+    snap = reg.snapshot()
+    assert snap["h.empty.count"] == 0
+    assert snap["h.empty.p50"] == 0.0
+    assert snap["h.mixed.count"] == 2 and snap["h.mixed.max"] == 3.0
+    assert snap["h.scalar.count"] == 0
+
+    import numpy as np
+    awkward = types.SimpleNamespace(
+        none=None, text="hello", arr=np.arange(3), tags={"a", "b"},
+        nested={"x": 1.5, "bad": object()}, n=7)
+    record_any(reg, "any", awkward)
+    snap = reg.snapshot()
+    assert snap["any.n"] == 7.0
+    assert snap["any.nested.x"] == 1.5
+    assert not any(k.startswith("any.text") for k in snap)
+
+    deep = {"a": {"b": {"c": {"d": {"e": {"f": {"g": {"h": {"i": 1.0}}}}}}}}}
+    record_any(reg, "deep", deep)          # depth-capped, never recurses away
+
+
+def test_trace_set_shift_and_commit_edge_cases():
+    """Zero-span streams commit cleanly, set_shift on an unknown group is
+    inert, and a thief group shifted past the scan end still resolves."""
+    tracer = Tracer()
+    ctx = tracer.begin("scan")
+    ctx.stream("stream0")                   # a stream that never records
+    ctx.span("scan.end", 0.0, 10.0)
+    thief = ctx.stream("stream1")
+    thief.span("rdma.pull", 0.0, 2.0)
+    ctx.set_shift(thief.group, 100.0)       # shifted past scan end
+    ctx.set_shift("no-such-group", 5.0)
+    ctx.base_s = 1.0
+    ctx.commit()
+    ctx.commit()                            # idempotent: collected once
+    assert len(tracer.contexts) == 1
+    thief_spans = [s for s in ctx.spans if s.track == "stream1"]
+    assert thief_spans[0].start_s == pytest.approx(101.0)
+    doc = tracer.to_chrome()
+    assert all(e["ts"] >= 0 for e in doc["traceEvents"] if e["ph"] == "X")
+
+    empty = tracer.begin("empty")
+    empty.commit()                          # zero-span context exports
+    assert tracer.to_chrome()
+
+
+def test_qos_stats_merge_alert_counters():
+    from repro.qos.metrics import QosStats
+    a, b = QosStats(), QosStats()
+    a.alerts, b.alerts = 2, 1
+    a.merge(b)
+    assert a.alerts == 3
+    assert "alerts=3" in a.summary()
+    assert a.registry().snapshot()["qos.alerts"] == 3
+    assert QosStats().registry().snapshot()["qos.alerts"] == 0
+
+
 # -------------------------------------------------------------- baselining
 
 

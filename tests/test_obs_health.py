@@ -1,0 +1,303 @@
+"""repro.obs health/SLO/postmortem layer: the per-server health state
+machine (immediate escalation, hysteretic recovery, quarantine mirrored
+from the rate history), multi-window burn-rate alerting (fire, latch,
+clear, sample floors), the flight-recorder ring + postmortem bundle, and
+the coordinator notify funnel end to end through a wired gateway."""
+import json
+
+import pytest
+from conftest import make_coordinator
+
+from repro.cluster import ClusterCoordinator
+from repro.obs import (DEGRADED, HEALTHY, QUARANTINED, SUSPECT, FlightRecorder,
+                       HealthConfig, HealthMonitor, MetricsRegistry, SloAlert,
+                       SloEngine, SloObjective, Tracer, record_health)
+from repro.qos import (AdmissionConfig, ClientClass, DistributedConfig,
+                       ScanGateway, ScanRequest, ShardedAdmission)
+from repro.sched import AdaptiveScheduler, RateHistory, StealConfig
+
+pytestmark = pytest.mark.obs
+
+SQL = "SELECT c0, c1 FROM t"
+
+
+# ----------------------------------------------------------- health machine
+
+
+def test_health_escalates_immediately_recovers_hysteretically():
+    mon = HealthMonitor()
+    mon.observe_event("stream.fault", "s0", 1.0)
+    fired = mon.heartbeat(1.0)
+    assert mon.state("s0") == SUSPECT           # escalation: one beat
+    assert [t.kind for t in fired] == ["escalate"]
+    assert fired[0].is_escalation
+
+    # recovery: recover_heartbeats (2) clean beats per ONE level down
+    assert mon.heartbeat(2.0) == []
+    assert mon.state("s0") == SUSPECT
+    (down,) = mon.heartbeat(3.0)
+    assert (down.frm, down.to) == (SUSPECT, DEGRADED)
+    assert mon.heartbeat(4.0) == []
+    (down,) = mon.heartbeat(5.0)
+    assert (down.frm, down.to) == (DEGRADED, HEALTHY)
+    assert mon.state("s0") == HEALTHY
+
+
+def test_health_dirty_beat_resets_recovery_streak():
+    mon = HealthMonitor()
+    mon.observe_event("stream.fault", "s0", 1.0)
+    mon.heartbeat(1.0)
+    mon.heartbeat(2.0)                           # clean streak 1
+    mon.observe_event("stream.fault", "s0", 2.5)
+    mon.heartbeat(3.0)                           # dirty: streak resets
+    mon.heartbeat(4.0)
+    assert mon.state("s0") == SUSPECT            # one clean beat: no recovery
+    mon.heartbeat(5.0)
+    assert mon.state("s0") == DEGRADED
+
+
+def test_health_fault_storm_quarantines_without_history():
+    mon = HealthMonitor(HealthConfig(fault_quarantine=3))
+    for _ in range(3):
+        mon.observe_event("stream.fault", "s0", 1.0)
+    mon.heartbeat(1.0)
+    assert mon.state("s0") == QUARANTINED
+    # the beat after the storm ends: straight to suspect, never healthy
+    (down,) = mon.heartbeat(2.0)
+    assert (down.frm, down.to) == (QUARANTINED, SUSPECT)
+
+
+def test_health_degraded_verdicts_from_declines_and_rate():
+    hist = RateHistory()
+    hist.observe("slow", 40e-6)
+    hist.observe("a", 10e-6)
+    hist.observe("b", 10e-6)
+    mon = HealthMonitor().bind(history=hist)
+    mon.observe_event("steal.decline", "thief", 1.0)
+    mon.heartbeat(1.0)
+    assert mon.state("slow") == DEGRADED         # rate > 2x fleet median
+    assert mon.state("thief") == DEGRADED        # steal decline in window
+    assert mon.state("a") == mon.state("b") == HEALTHY
+
+
+def test_health_quarantine_conformant_with_rate_history():
+    """The acceptance criterion: in a fault-free run the monitor's
+    quarantine verdicts are exactly ``RateHistory.quarantined``'s — both
+    while the history holds the server and after the quarantine lifts,
+    driven by a recorded flap observation trace."""
+    hist = RateHistory(quarantine_rounds=3)
+    mon = HealthMonitor().bind(history=hist)
+    # the flap trace: fast -> slow -> fast (> flap_ratio both ways)
+    trace = [("f", 10e-6), ("f", 30e-6), ("f", 10e-6), ("ok", 10e-6)]
+    for sid, rate in trace:
+        hist.observe(sid, rate)
+    hist.tick()
+    assert hist.quarantined("f") and not hist.quarantined("ok")
+
+    beat = 0
+    while hist.quarantined("f"):
+        beat += 1
+        mon.heartbeat(float(beat))
+        for sid in ("f", "ok"):
+            assert (mon.state(sid) == QUARANTINED) == hist.quarantined(sid)
+        hist.tick()                              # a lease round passes
+    # quarantine lifted: the next heartbeat must agree again (suspect, not
+    # quarantined) and then hysteresis takes it the rest of the way down
+    mon.heartbeat(float(beat + 1))
+    assert mon.state("f") == SUSPECT
+    for sid in ("f", "ok"):
+        assert (mon.state(sid) == QUARANTINED) == hist.quarantined(sid)
+
+
+def test_health_snapshot_and_registry_rollup():
+    mon = HealthMonitor()
+    mon.observe_event("stream.fault", "s1", 1.0)
+    mon.heartbeat(1.0)
+    snap = mon.snapshot()
+    assert snap["heartbeats"] == 1
+    assert snap["servers"]["s1"]["state"] == SUSPECT
+    assert snap["servers"]["s1"]["faults"] == 1
+
+    reg = MetricsRegistry()
+    record_health(reg, mon)
+    out = reg.snapshot()
+    assert out["health.heartbeats"] == 1
+    assert out["health.server.s1.level"] == 2.0   # suspect
+    assert out["health.server.s1.faults"] == 1
+
+    from repro.utils.report import health_table
+    table = health_table(mon)
+    assert "s1" in table and SUSPECT in table and "heartbeats=1" in table
+
+
+# ------------------------------------------------------------ slo burn rate
+
+
+def _snapshot(value):
+    return {"m.us": value}
+
+
+def _engine(goal=0.75, windows=((10.0, 1.0), (2.0, 1.0)), min_samples=3):
+    return SloEngine([SloObjective("obj", "m.us", target=100.0, goal=goal,
+                                   windows=windows, min_samples=min_samples)])
+
+
+def test_slo_fires_latches_and_clears():
+    eng = _engine()
+    seen = []
+    eng.subscribe(seen.append)
+    assert eng.observe(1.0, _snapshot(200.0)) == []    # below min_samples
+    assert eng.observe(2.0, _snapshot(200.0)) == []
+    (alert,) = eng.observe(3.0, _snapshot(200.0))
+    assert isinstance(alert, SloAlert) and alert.is_page
+    assert alert.n_samples == 3 and alert.value == 200.0
+    assert all(b == pytest.approx(4.0) for b in alert.burns)  # 1.0 / 0.25
+    assert seen == [alert] and eng.firing("obj")
+
+    assert eng.observe(4.0, _snapshot(200.0)) == []    # latched: no re-page
+    assert len(eng.alerts) == 1
+
+    for t in (5.0, 6.0, 7.0):                          # good samples drain
+        eng.observe(t, _snapshot(50.0))                # the short window
+    assert not eng.firing("obj") and eng.resolved == 1
+
+    for t in (8.0, 9.0, 10.0):                         # re-breach: new alert
+        eng.observe(t, _snapshot(200.0))
+    assert len(eng.alerts) == 2
+
+
+def test_slo_long_window_blocks_one_bad_sample():
+    """One bad scan inside a clean long window must NOT page: the long
+    window's burn stays under threshold even though the short one spikes."""
+    eng = _engine()
+    for t in (1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0):
+        eng.observe(t, _snapshot(50.0))
+    fired = eng.observe(8.0, _snapshot(500.0))
+    assert fired == [] and not eng.firing("obj")
+
+
+def test_slo_skips_missing_and_non_numeric_metrics():
+    eng = _engine(min_samples=1)
+    assert eng.observe(1.0, {}) == []
+    assert eng.observe(2.0, {"m.us": None}) == []
+    assert eng.observe(3.0, {"m.us": "n/a"}) == []
+    assert eng.observe(4.0, {"m.us": True}) == []      # bools excluded
+    (alert,) = eng.observe(5.0, _snapshot(200.0))
+    assert alert.n_samples == 1                        # only the real sample
+
+
+def test_slo_better_higher_objective():
+    eng = SloEngine([SloObjective("done", "n", target=24.0, better="higher",
+                                  goal=0.5, windows=((10.0, 1.0),),
+                                  min_samples=1)])
+    assert eng.observe(1.0, {"n": 24.0}) == []
+    (alert,) = eng.observe(2.0, {"n": 7.0})
+    assert alert.objective == "done"
+
+
+# ---------------------------------------------------------- flight recorder
+
+
+def test_recorder_ring_bounds_and_filters():
+    rec = FlightRecorder(capacity=4)
+    for i in range(6):
+        rec.record("steal" if i % 2 else "qos.shed", now_s=float(i),
+                   server_id=f"s{i}")
+    assert len(rec) == 4 and rec.dropped == 2
+    evs = rec.events()
+    assert [e.seq for e in evs] == [2, 3, 4, 5]        # oldest first
+    assert [e.kind for e in rec.events(kinds={"steal"})] == ["steal"] * 2
+    assert len(rec.events(last_n=1)) == 1
+    assert rec.counts() == {"qos.shed": 2, "steal": 2}
+    assert "steal" in str(evs[1]) and evs[1].attrs == {}
+
+
+def test_recorder_postmortem_bundle_and_dump(tmp_path):
+    rec = FlightRecorder()
+    rec.record("steal.decline", now_s=1.0, server_id="s4", victim="s2")
+    mon = HealthMonitor(recorder=rec)
+    mon.observe_event("stream.fault", "s2", 2.0)
+    mon.heartbeat(2.0)
+    reg = MetricsRegistry()
+    reg.gauge("x.us", 3.0)
+    tracer = Tracer()
+    tracer.begin("scan").commit()
+    alert = SloAlert(kind="burn_rate", objective="o", metric="x.us",
+                     value=3.0, target=1.0, goal=0.75, burns=(4.0,),
+                     windows=((1.0, 1.0),), now_s=2.0, n_samples=3)
+
+    path = rec.dump(str(tmp_path / "pm" / "bundle.json"), trigger=alert,
+                    registry=reg, health=mon, tracer=tracer)
+    bundle = json.load(open(path))
+    assert bundle["trigger"]["objective"] == "o"
+    kinds = [e["kind"] for e in bundle["events"]]
+    assert "steal.decline" in kinds and "health.escalate" in kinds
+    assert bundle["event_counts"]["steal.decline"] == 1
+    assert bundle["registry"]["x.us"] == 3.0
+    assert bundle["health"]["servers"]["s2"]["state"] == SUSPECT
+    assert bundle["health_transitions"]
+    assert "traceEvents" in bundle["trace"]
+
+
+# ------------------------------------------------- coordinator notify funnel
+
+
+def test_coordinator_notify_fans_out_to_recorder_and_health():
+    rec = FlightRecorder()
+    mon = HealthMonitor()
+    coord = ClusterCoordinator(recorder=rec, health=mon)
+    coord.notify("stream.fault", server_id="s0", now_s=1.0, delivered=3)
+    assert rec.events()[0].attrs == {"delivered": 3}
+    assert mon.servers["s0"].window_faults == 1
+    assert coord.heartbeat(1.0)[0].to == SUSPECT
+
+    bare = ClusterCoordinator()                  # both sinks absent: no-ops
+    bare.notify("stream.fault", server_id="s0", now_s=1.0)
+    assert bare.heartbeat(1.0) == []
+
+    from repro.cluster.streams import notify_coordinator
+    notify_coordinator(object(), "steal")        # no .notify: tolerated
+    notify_coordinator(None, "steal")
+
+
+def test_gateway_degradation_pages_with_causal_events():
+    """End to end: a straggling replica behind a wired gateway trips the
+    burn-rate engine, and the causal steal events are in the recorder."""
+    rec = FlightRecorder()
+    hist = RateHistory(quarantine_rounds=64)
+    mon = HealthMonitor(recorder=rec).bind(history=hist)
+    eng = SloEngine()
+    admission = ShardedAdmission(
+        AdmissionConfig(max_streams_total=8),
+        [f"s{i}" for i in range(4)],
+        dist=DistributedConfig(borrow_limit=0))
+    admission.recorder = rec
+    coord = make_coordinator(4, "replica", slow=1, slowdown=4.0,
+                             admission=admission)
+    coord.recorder = rec
+    coord.health = mon
+    mon.bind(admission=admission)
+    gateway = ScanGateway(
+        coord, classes=[ClientClass("batch", 1.0)],
+        scheduler=AdaptiveScheduler(steal=StealConfig(), history=hist))
+
+    alerts = []
+    for hb in range(1, 5):
+        # 2 of 4 replicas leased (the s1 straggler among them): s2/s3 idle
+        req = gateway.submit(ScanRequest("c", "batch", SQL, "/d",
+                                         arrival_s=gateway.clock_s,
+                                         num_streams=2))
+        gateway.run()
+        result = gateway.results[req.request_id]
+        cp_us = result.cluster.modeled_critical_path_s * 1e6
+        coord.heartbeat(gateway.clock_s)
+        if hb == 1:                  # calibrate a deliberately tight target
+            eng.add(SloObjective("cp", "cp.us", target=0.9 * cp_us,
+                                 goal=0.75, windows=((1e3, 1.0),),
+                                 min_samples=2))
+        alerts += eng.observe(gateway.clock_s, {"cp.us": cp_us})
+    assert alerts and alerts[0].objective == "cp"
+    assert rec.counts().get("steal", 0) >= 1     # the causal event survives
+    # straggler marked unhealthy by rate vs fleet median at SOME heartbeat
+    assert any(t.server_id == "s1" and t.is_escalation
+               for t in mon.transitions)

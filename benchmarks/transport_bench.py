@@ -52,6 +52,21 @@ checks:
   bundle it dumps carries the causal ``steal`` / ``steal.decline`` events,
   and the health monitor's quarantine verdicts agree with the
   ``RateHistory``'s, server by server.
+* ``--scenario stress`` — the stress workload driver
+  (``repro.obs.workload``): a seeded four-population mix (interactive
+  lookups / batch analytics / a scan-storm burst / an adversarial
+  quota-squatter) submitted through one gateway on one modeled clock,
+  per-population ``workload.*`` telemetry plus Jain-fairness and
+  latency-inflation gauges judged by per-population burn-rate objectives.
+  Asserts the calibrated mix fires ZERO alerts across its clean
+  heartbeats, the injected scan-storm overload pages within
+  ``STRESS_HEARTBEAT_BUDGET`` beats, the dumped postmortem bundle carries
+  the causal ``qos.shed`` / ``qos.backpressure`` events, and the Jain
+  index drops under overload.
+
+``--side-load`` additionally rides the contention/flap/slo scenarios with
+background ``SideWorkload`` traffic (off by default — the measured
+geometries stay exactly as calibrated without it).
 
 Every judged number routes through the continuous-baselining layer
 (``repro.obs``): called directly the scenarios self-assert on the constants
@@ -88,10 +103,12 @@ from repro.qos import (AdmissionConfig, AdmissionController, Backpressure,
                        ScanRequest, ShardedAdmission)
 from repro.sched import (AdaptiveScheduler, RateHistory, StealConfig,
                          StealingPuller, TicketTable)
-from repro.obs import (QUARANTINED, FlightRecorder, HealthMonitor,
-                       MetricPolicy, MetricsRegistry, RunRecord, SloEngine,
-                       SloObjective, Tracer, append_run, current_git_sha,
-                       detect_events, load_trajectory, record_cluster,
+from repro.obs import (QUARANTINED, ClientPopulation, FlightRecorder,
+                       HealthMonitor, InteractiveSideLoad, MetricPolicy,
+                       MetricsRegistry, PopulationSideWorkload, RunRecord,
+                       SloEngine, SloObjective, StressDriver, Tracer,
+                       append_run, current_git_sha, detect_events,
+                       load_trajectory, population_classes, record_cluster,
                        record_health)
 
 TOTAL_COLS = 8
@@ -288,10 +305,12 @@ def _submit_contention_mix(gateway: ScanGateway,
                                    cost_hint=1.0, deadline_s=ui_deadline_s))
 
 
-def run_contention() -> list[Row]:
+def run_contention(side_load: bool = False) -> list[Row]:
     """Clients × quota axis: heavy batch scans vs interactive lookups
     through the qos gateway, QoS off (FIFO, unlimited) vs on (WFQ + quota +
-    token bucket). Deterministic: all latencies are modeled."""
+    token bucket). Deterministic: all latencies are modeled. With
+    ``side_load``, an ``InteractiveSideLoad`` rides each drain (shard
+    placement: no fan-out hint)."""
     base_cfg = calibrated_fabric().config
     table = make_numeric_table("t", CONTENTION_ROWS, TOTAL_COLS,
                                batch_rows=CONTENTION_BATCH_ROWS)
@@ -306,6 +325,9 @@ def run_contention() -> list[Row]:
         # ...and a late burst with a deadline so tight it must be shed
         # under any ordering (the shed counter's fixture)
         _submit_contention_mix(gateway, ui_deadline_s=50e-3)
+        if side_load:
+            InteractiveSideLoad(LIGHT_SQL, "/d",
+                                num_streams=None).submit(gateway)
         for _ in range(2):
             gateway.submit(ScanRequest("burst", "batch", HEAVY_SQL, "/d",
                                        cost_hint=8.0, deadline_s=1e-6))
@@ -523,7 +545,7 @@ def run_admission() -> list[Row]:
     return rows
 
 
-def run_flap() -> list[Row]:
+def run_flap(side_load: bool = False) -> list[Row]:
     """History-aware vs no-history stealing under a flapping replica,
     self-asserting three ways.
 
@@ -651,6 +673,21 @@ def run_flap() -> list[Row]:
         f"a thief shard over-admitted a stolen range: {over} (slices "
         f"{slices})")
     assert delivered == 24, f"dropped batches: {delivered}/24"
+
+    if side_load:
+        # background lookups through the SideWorkload protocol on a clean
+        # build of the same cluster — AFTER the measured runs, so the
+        # steal-geometry assertions above never see the extra traffic
+        side_gw = ScanGateway(make_coord(1.0),
+                              classes=[ClientClass("interactive", 4.0)])
+        side_reqs = submit_side_load(side_gw)
+        side_gw.run()
+        side = side_gw.stats.klass("interactive")
+        assert side.granted == len(side_reqs), (
+            f"side load dropped requests: {side.granted}/{len(side_reqs)}")
+        rows.append(Row("flap_side_load",
+                        side.p50_grant_latency_s * 1e6,
+                        f"granted={side.granted}/{side.submitted}"))
     return rows
 
 
@@ -663,18 +700,15 @@ def submit_side_load(gateway: ScanGateway, *, count: int = 2,
                      client_id: str = "side") -> list[ScanRequest]:
     """Low-rate interactive side-load mixin: a couple of light lookups
     riding along each heartbeat's batch scan (off by default everywhere;
-    the slo scenario turns it on). Keeps the WFQ + admission machinery
-    exercised while the SLO engine watches the primary — and seeds the
-    ROADMAP's stress-workload-driver direction."""
-    reqs = []
-    for _ in range(count):
-        reqs.append(gateway.submit(ScanRequest(
-            client_id, "interactive", LIGHT_SQL, "/d", cost_hint=1.0,
-            arrival_s=gateway.clock_s, num_streams=2)))
-    return reqs
+    the slo scenario turns it on). Delegates to the obs ``SideWorkload``
+    protocol — ``InteractiveSideLoad`` is the single implementation of
+    this shape now, and ``tests/test_obs_workload.py`` conformance-asserts
+    the delegation reproduces the original submit schedule exactly."""
+    return InteractiveSideLoad(LIGHT_SQL, "/d", count=count,
+                               client_id=client_id).submit(gateway)
 
 
-def run_slo() -> list[Row]:
+def run_slo(side_load: bool = False) -> list[Row]:
     """Cluster health + SLO burn rate + flight-recorder postmortem, end to
     end, self-asserting four ways.
 
@@ -752,6 +786,13 @@ def run_slo() -> list[Row]:
 
     epoch_base = 0.0            # monotonic modeled time across gateways
     last_reg = [MetricsRegistry()]   # the postmortem's registry snapshot
+    # --side-load: one extra seeded interactive population riding every
+    # beat through the SideWorkload protocol (its window cursor spans the
+    # per-phase gateways; the burn targets recalibrate around it)
+    extra_load = PopulationSideWorkload(ClientPopulation(
+        "interactive", arrival="uniform", rate_per_beat=1.0, sql=LIGHT_SQL,
+        cost_hint=1.0, num_streams=2, client_id="side2"),
+        seed=11) if side_load else None
 
     def beat(gateway: ScanGateway):
         """One heartbeat: primary batch scan + interactive side-load →
@@ -760,6 +801,8 @@ def run_slo() -> list[Row]:
             "primary", "batch", sql, "/d", cost_hint=8.0,
             arrival_s=gateway.clock_s, num_streams=3))
         submit_side_load(gateway)
+        if extra_load is not None:
+            extra_load.submit(gateway)
         gateway.run()
         result = gateway.results[req.request_id]
         now = epoch_base + gateway.clock_s
@@ -877,14 +920,224 @@ def run_slo() -> list[Row]:
     return rows
 
 
-_SCENARIOS = {"fig2": lambda transport: run(transport),
-              "cluster": lambda transport: run_cluster(),
-              "contention": lambda transport: run_contention(),
-              "straggler": lambda transport: run_straggler(),
-              "sharing": lambda transport: run_sharing(),
-              "admission": lambda transport: run_admission(),
-              "flap": lambda transport: run_flap(),
-              "slo": lambda transport: run_slo()}
+STRESS_HEARTBEAT_BUDGET = 8   # overload beats before paging counts as late
+STRESS_CLEAN_BEATS = 7        # armed clean beats before the storm starts
+STRESS_SEED = 7
+STRESS_POSTMORTEM_PATH = os.path.join("artifacts", "postmortem",
+                                      "stress_postmortem.json")
+
+
+def run_stress() -> list[Row]:
+    """The stress workload driver end to end, self-asserting both ways.
+
+    A seeded four-population mix through ONE gateway on ONE modeled clock
+    (``repro.obs.workload.StressDriver``):
+
+    * ``interactive`` — light 2-stream lookups, 3/beat uniformly through
+      each beat window, deadline-budgeted (weight 4);
+    * ``batch`` — one heavy 3-stream analytics scan per beat (weight 1);
+    * ``storm`` — a Poisson scan-storm burst of heavy 2-stream scans with
+      lognormal cost jitter, inactive until beat ``STRESS_CLEAN_BEATS``;
+    * ``squatter`` — submits nothing; at storm time it seizes both
+      admission slots on ``s2``, so every 3-stream batch fan-out declines
+      (``qos.backpressure``) while 2-stream traffic squeezes through.
+
+    Phases: (1) *calibrate* — the same mix minus storm/squatter/deadline on
+    a probe gateway derives the beat spacing, the clean interactive beat
+    p50 and the gateway's service-per-cost estimate; (2) *clean verify* —
+    ``STRESS_CLEAN_BEATS`` beats of the calibrated mix through the ARMED
+    burn-rate engine must fire ZERO alerts; (3) *overload* — storm +
+    squatter activate, and a per-population objective must page within
+    ``STRESS_HEARTBEAT_BUDGET`` beats, dumping a postmortem whose event
+    window carries the causal ``qos.shed`` (interactive deadline sheds)
+    AND ``qos.backpressure`` (batch admission declines) events. The Jain
+    fairness index over per-population throughput must drop under
+    overload.
+
+    Like flap/slo this runs on the FIXED paper-class ``FabricConfig``:
+    every judged number is modeled decision geometry, so the whole run —
+    schedule, telemetry, page beat — replays identically and the
+    trajectory envelope can hold it tight.
+    """
+    base = FabricConfig()
+    ids = ["s0", "s1", "s2", "s3", "s4"]
+    EXPECTED_BATCHES = 24
+    table = make_numeric_table("t", EXPECTED_BATCHES * (1 << 13), 4,
+                               batch_rows=1 << 13)
+    heavy_sql = "SELECT c0, c1, c2, c3 FROM t"
+
+    recorder = FlightRecorder(capacity=1024)
+    health = HealthMonitor(recorder=recorder)
+    engine = SloEngine()
+    tracer = Tracer()
+
+    def base_populations(deadline_s=None):
+        return [
+            ClientPopulation("interactive", weight=4.0, arrival="uniform",
+                             rate_per_beat=3.0, sql=LIGHT_SQL,
+                             cost_hint=1.0, num_streams=2,
+                             deadline_s=deadline_s),
+            ClientPopulation("batch", weight=1.0, arrival="burst",
+                             rate_per_beat=1.0, sql=heavy_sql,
+                             cost_hint=8.0, num_streams=3),
+        ]
+
+    def make_gateway(populations, est_service_s_per_cost=1e-4):
+        admission = ShardedAdmission(
+            AdmissionConfig(max_streams_total=2 * len(ids)), ids,
+            dist=DistributedConfig(borrow_limit=0))
+        admission.recorder = recorder
+        coord = ClusterCoordinator(admission=admission, recorder=recorder,
+                                   health=health)
+        for sid in ids:
+            coord.add_server(sid, ThallusServer(Engine(), Fabric(base)))
+        coord.place_replicas("/d", table)
+        health.bind(admission=admission)
+        # modeled_service: stream service charged in fabric-modeled wire
+        # time, not measured host time — grant latencies, beat windows and
+        # the page beat become a pure function of (seed, FabricConfig), so
+        # two consecutive runs emit identical trajectories.
+        return ScanGateway(coord, classes=population_classes(populations),
+                           tracer=tracer, modeled_service=True,
+                           est_service_s_per_cost=est_service_s_per_cost)
+
+    # ---- phase 1: calibrate the clean mix on a probe gateway -------------
+    calib_pops = base_populations()
+    calib = StressDriver(make_gateway(calib_pops), calib_pops,
+                         seed=STRESS_SEED, recorder=recorder)
+    clean_p50s_us = []
+    for _ in range(3):
+        calib.beat()
+        clean_p50s_us.append(
+            calib.beat_stats["interactive"]["p50_grant_us"])
+    dt = calib.window_s / 3.0
+    clean_p50_us = sorted(clean_p50s_us)[1]
+    cost_per_beat = sum(p.rate_per_beat * p.cost_hint for p in calib_pops)
+    service_per_cost = dt / cost_per_beat
+    assert calib.sheds["interactive"] == 0 and not calib.alerts
+
+    # ---- phase 2+3: the armed mix, storm injected at STRESS_CLEAN_BEATS --
+    populations = base_populations(deadline_s=1.5 * dt) + [
+        ClientPopulation("storm", weight=2.0, arrival="poisson",
+                         rate_per_beat=6.0, sql=heavy_sql, cost_hint=8.0,
+                         cost_jitter=0.3, num_streams=2,
+                         start_beat=STRESS_CLEAN_BEATS),
+        ClientPopulation("squatter", weight=1.0, rate_per_beat=0.0,
+                         start_beat=STRESS_CLEAN_BEATS,
+                         squat_servers=("s2", "s2")),
+    ]
+    # the long window spans the overload regime (~3-5 storm beats), not the
+    # whole run: diluting burn with the seven clean beats would let a
+    # sustained storm hide under the clean prefix
+    long_s, short_s = 12.0 * dt, 1.5 * dt
+    engine.add(SloObjective(
+        "stress-interactive-latency", "workload.interactive.beat.p50_grant_us",
+        target=1.3 * clean_p50_us, better="lower", goal=0.75,
+        windows=((long_s, 1.2), (short_s, 1.2)), min_samples=3))
+    engine.add(SloObjective(
+        "stress-interactive-shed", "workload.interactive.beat.shed",
+        target=0.5, better="lower", goal=0.75,
+        windows=((long_s, 1.2), (short_s, 1.2)), min_samples=3))
+    driver = StressDriver(make_gateway(populations, service_per_cost),
+                          populations, seed=STRESS_SEED, slo=engine,
+                          recorder=recorder)
+    dumped: list[str] = []
+    engine.subscribe(lambda alert: dumped.append(recorder.dump(
+        STRESS_POSTMORTEM_PATH, trigger=alert, registry=driver.registry,
+        health=health, tracer=tracer, last_n=128)))
+
+    for _ in range(STRESS_CLEAN_BEATS):
+        driver.beat()
+    false_alerts = len(driver.alerts)
+    jain_clean = driver.fairness()["jain"]
+
+    alert, alert_beat = None, None
+    for hb in range(1, STRESS_HEARTBEAT_BUDGET + 1):
+        report = driver.beat()
+        if report.alerts:
+            alert, alert_beat = report.alerts[0], hb
+            break
+    fair = driver.fairness()
+    jain_overload = fair["jain"]
+    snap = driver.registry.snapshot()
+
+    # ---- verdicts -------------------------------------------------------
+    assert false_alerts == 0, (
+        f"{false_alerts} alert(s) fired on the calibrated clean mix")
+    assert alert is not None, (
+        f"stress overload never paged within {STRESS_HEARTBEAT_BUDGET} "
+        f"beats (clean p50 {clean_p50_us:.1f}us, dt {dt * 1e6:.1f}us)")
+    assert alert.objective.startswith("stress-interactive"), (
+        f"wrong objective paged: {alert.objective}")
+    assert driver.sheds["interactive"] >= 1, "no interactive deadline sheds"
+    assert driver.declines["batch"] >= 1, (
+        "the squatter never forced a batch admission decline")
+    assert jain_overload < jain_clean, (
+        f"overload did not dent fairness: jain {jain_clean:.3f} -> "
+        f"{jain_overload:.3f}")
+    for name in ("workload.interactive.grant_latency.p50",
+                 "workload.interactive.grant_latency.p99",
+                 "workload.storm.throughput_bps",
+                 "workload.fairness.jain"):
+        assert name in snap, f"missing workload metric {name!r}"
+    assert dumped and os.path.exists(dumped[0]), "postmortem never dumped"
+    import json as _json
+    with open(dumped[0]) as f:
+        bundle = _json.load(f)
+    for kind in ("qos.shed", "qos.backpressure"):
+        assert any(e["kind"] == kind for e in bundle["events"]), (
+            f"postmortem event window lost the causal {kind} "
+            f"(counts={bundle['event_counts']})")
+
+    _metric("stress_alert_latency_heartbeats", alert_beat,
+            ceiling=STRESS_HEARTBEAT_BUDGET, better="lower",
+            detail="overload beats until a stress objective paged")
+    _metric("stress_false_alerts", false_alerts, ceiling=0,
+            detail="alerts fired during the calibrated clean beats")
+    # fixed FabricConfig + seeded populations => deterministic: tight
+    # envelope drift detectors over the fairness geometry
+    _metric("workload_jain_clean", jain_clean, better="higher")
+    _metric("workload_jain_overload", jain_overload, better="higher")
+    _metric("workload_latency_inflation", fair["latency_inflation"],
+            better="lower")
+    _metric("stress_interactive_clean_p50_us", clean_p50_us, better="lower")
+
+    rows: list[Row] = []
+    for p in populations:
+        c = driver.gateway.stats.classes.get(p.name)
+        if c is None:
+            continue
+        rows.append(Row(
+            f"stress_{p.name}", c.p50_grant_latency_s * 1e6,
+            f"granted={c.granted}/{c.submitted} "
+            f"shed_deadline={driver.sheds.get(p.name, 0)} "
+            f"declines={driver.declines.get(p.name, 0)} "
+            f"tput_MBps={c.throughput_over(driver.window_s) / 1e6:.1f}"))
+    rows.append(Row(
+        "stress_alert_latency", float(alert_beat),
+        f"budget={STRESS_HEARTBEAT_BUDGET} objective={alert.objective} "
+        f"value={alert.value:.1f} clean_p50_us={clean_p50_us:.1f} "
+        f"dt_us={dt * 1e6:.1f} postmortem={dumped[0]}"))
+    rows.append(Row(
+        "stress_jain", jain_overload,
+        f"clean={jain_clean:.3f} overload={jain_overload:.3f} "
+        f"inflation={fair['latency_inflation']:.2f} "
+        f"false_alerts={false_alerts} beats={driver.beats}"))
+    return rows
+
+
+_SCENARIOS = {
+    "fig2": lambda transport, side_load=False: run(transport),
+    "cluster": lambda transport, side_load=False: run_cluster(),
+    "contention": lambda transport, side_load=False:
+        run_contention(side_load=side_load),
+    "straggler": lambda transport, side_load=False: run_straggler(),
+    "sharing": lambda transport, side_load=False: run_sharing(),
+    "admission": lambda transport, side_load=False: run_admission(),
+    "flap": lambda transport, side_load=False: run_flap(side_load=side_load),
+    "slo": lambda transport, side_load=False: run_slo(side_load=side_load),
+    "stress": lambda transport, side_load=False: run_stress(),
+}
 
 
 def main() -> int:
@@ -902,13 +1155,17 @@ def main() -> int:
                     help="append each scenario's run record "
                     "(BENCH_<scenario>.json + trajectory.jsonl) to DIR; "
                     "check it later with `python -m repro.obs.baseline DIR`")
+    ap.add_argument("--side-load", action="store_true", dest="side_load",
+                    help="ride the contention/flap/slo scenarios with "
+                    "background SideWorkload traffic (off by default: the "
+                    "measured geometries stay exactly as calibrated)")
     args = ap.parse_args()
     if args.cluster_only:
         scenarios = ["cluster"]
     elif args.scenario == "all":
         # fig2 already appends cluster
         scenarios = ["fig2", "contention", "straggler", "sharing",
-                     "admission", "flap", "slo"]
+                     "admission", "flap", "slo", "stress"]
     elif args.scenario is not None:
         scenarios = [args.scenario]
     else:
@@ -922,7 +1179,8 @@ def main() -> int:
     for name in scenarios:
         _RUN = ScenarioRun(name, out_dir=args.json_dir, config=run_cfg)
         try:
-            scenario_rows = _SCENARIOS[name](args.transport)
+            scenario_rows = _SCENARIOS[name](args.transport,
+                                             side_load=args.side_load)
         except AssertionError as exc:       # a hard invariant broke mid-run
             failures.append((name, str(exc)))
             _RUN = None

@@ -13,7 +13,13 @@ recorder and health monitor, heartbeat by heartbeat, with a deliberately
 tight burn-rate objective so the demo always pages. Health transitions and
 SLO alerts are then embedded as **instant events** on dedicated ``health`` /
 ``slo`` tracks, so the timeline shows the page next to the slow spans that
-caused it. Load the output in ``chrome://tracing`` or
+caused it.
+
+Phase 3 runs a seeded stress-driver population mix (interactive lookups
+under a Poisson scan storm) through its own gateway on the same tracer:
+each beat lands per-population instants on ``workload.<pop>`` tracks
+(grants, sheds, declines, beat p50) plus a ``workload.fairness`` track
+carrying the rolling Jain index. Load the output in ``chrome://tracing`` or
 https://ui.perfetto.dev; per-(cat, span) aggregates and the health table
 print on stdout.
 
@@ -27,8 +33,9 @@ sys.path.insert(0, "src")
 from repro.cluster import ClusterCoordinator
 from repro.core import Fabric, FabricConfig, FlappingFabric, ThallusServer
 from repro.engine import Engine, make_numeric_table
-from repro.obs import (FlightRecorder, HealthMonitor, MetricsRegistry,
-                       SloEngine, SloObjective, Tracer, record_cluster,
+from repro.obs import (ClientPopulation, FlightRecorder, HealthMonitor,
+                       MetricsRegistry, SloEngine, SloObjective, StressDriver,
+                       Tracer, population_classes, record_cluster,
                        record_health)
 from repro.qos import (AdmissionConfig, AdmissionController, ClientClass,
                        DistributedConfig, ScanGateway, ScanRequest,
@@ -137,6 +144,43 @@ def main() -> int:
         fired = engine.observe(now, reg.snapshot())
         degraded.stats.alerts += len(fired)
 
+    # ---- phase 3: a stress-driver mix, one workload lane per population --
+    pops = [
+        ClientPopulation("interactive", weight=4.0, arrival="uniform",
+                         rate_per_beat=2.0, sql=LIGHT_SQL, dataset="/w",
+                         num_streams=2),
+        ClientPopulation("storm", weight=2.0, arrival="poisson",
+                         rate_per_beat=3.0, sql=HEAVY_SQL, dataset="/w",
+                         cost_hint=8.0, cost_jitter=0.3, num_streams=2,
+                         start_beat=2),
+    ]
+    stress_coord = ClusterCoordinator(recorder=recorder)
+    for i in range(SHARDS):
+        stress_coord.add_server(
+            f"w{i}", ThallusServer(Engine(), Fabric(FabricConfig())))
+    stress_coord.place_replicas("/w", make_numeric_table(
+        "t", 8 * BATCH_ROWS, 4, batch_rows=BATCH_ROWS))
+    driver = StressDriver(
+        ScanGateway(stress_coord, classes=population_classes(pops),
+                    tracer=tracer, modeled_service=True),
+        pops, seed=7)
+    wl = tracer.begin("workload")
+    for _ in range(5):
+        report = driver.beat()
+        for name, beat in sorted(driver.beat_stats.items()):
+            if not (beat["submitted"] or beat["shed"] or beat["declines"]):
+                continue
+            wl.instant(
+                f"{name}: {beat['granted']}/{beat['submitted']} "
+                f"p50={beat['p50_grant_us']:.0f}us",
+                report.now_s, track=f"workload.{name}", cat="workload",
+                shed=beat["shed"], declines=beat["declines"])
+        fair = driver.fairness()
+        wl.instant(f"jain={fair['jain']:.3f}", report.now_s,
+                   track="workload.fairness", cat="workload",
+                   inflation=round(fair["latency_inflation"], 2))
+    wl.commit()
+
     # ---- the health/slo lane: transitions + alerts as instant events -----
     lane = tracer.begin("health+slo")
     for t in health.transitions:
@@ -157,8 +201,10 @@ def main() -> int:
     print(trace_table(tracer))
     print()
     print(health_table(health))
+    fair = driver.fairness()
     print(f"\nalerts={len(engine.alerts)} "
-          f"recorder_events={len(recorder)}")
+          f"recorder_events={len(recorder)} "
+          f"workload_beats={driver.beats} jain={fair['jain']:.3f}")
     print(f"wrote {events} events across {len(tracer.contexts)} context(s) "
           f"to {path}")
     return 0

@@ -31,7 +31,14 @@ rest of :mod:`repro`, so every other layer may import obs without cycles):
   flight-recorder ring of structured cross-layer events
   (:class:`FlightRecorder`) that dumps a postmortem bundle — causal
   events + registry snapshot + health states + trace — when an alert
-  fires.
+  fires;
+* **stress workload driver** (:mod:`.workload`) — deterministic, seeded
+  client populations (:class:`ClientPopulation`) run as side workloads
+  (:class:`SideWorkload` / :class:`PopulationSideWorkload`) or as a full
+  mix through one gateway (:class:`StressDriver`), with per-population
+  telemetry under ``workload.*`` (grant-latency percentiles, throughput,
+  shed/decline attribution) and cross-population fairness
+  (:func:`jain_index`, latency inflation) judged by ``SloObjective``\\ s.
 """
 from __future__ import annotations
 
@@ -52,3 +59,8 @@ from .registry import (  # noqa: F401
 )
 from .slo import SloAlert, SloEngine, SloObjective  # noqa: F401
 from .trace import Span, StreamTrace, TraceContext, Tracer  # noqa: F401
+from .workload import (  # noqa: F401
+    BeatReport, ClientPopulation, InteractiveSideLoad,
+    PopulationSideWorkload, SideWorkload, StressDriver, jain_index,
+    population_classes, record_workload,
+)

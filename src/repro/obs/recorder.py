@@ -84,6 +84,13 @@ class FlightRecorder:
     def __len__(self) -> int:
         return len(self._ring)
 
+    @property
+    def next_seq(self) -> int:
+        """The seq the next recorded event will get — a cursor for
+        incremental consumers (every event with ``seq < next_seq`` has
+        been recorded, even if the ring has since dropped it)."""
+        return self._seq
+
     def events(self, last_n: int | None = None,
                kinds: Iterable[str] | None = None) -> list[FlightEvent]:
         """The recorded events, oldest first; optionally only the last

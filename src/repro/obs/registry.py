@@ -10,7 +10,7 @@ Namespace conventions:
 * durations are recorded in **microseconds** under ``.us``-suffixed names
   (``cluster.pull.us``, ``qos.makespan.us``);
 * per-event latencies go into histograms, whose snapshot expands to
-  ``.count`` / ``.p50`` / ``.p95`` / ``.max`` / ``.sum``
+  ``.count`` / ``.p50`` / ``.p95`` / ``.p99`` / ``.max`` / ``.sum``
   (``qos.grant_latency.p50`` is the p50 of the grant-latency histogram);
 * discrete events are counters (``sched.steals.decline``,
   ``pool.evictions``), sizes/levels are gauges.
@@ -71,7 +71,7 @@ class MetricsRegistry:
     # ------------------------------------------------------------- readers
     def snapshot(self) -> dict[str, float]:
         """One flat ``{dotted.name: value}`` view; histograms expand to
-        ``.count/.p50/.p95/.max/.sum``."""
+        ``.count/.p50/.p95/.p99/.max/.sum``."""
         out: dict[str, float] = {}
         out.update(self.counters)
         out.update(self.gauges)
@@ -80,6 +80,7 @@ class MetricsRegistry:
             out[f"{name}.count"] = float(len(vs))
             out[f"{name}.p50"] = _quantile(vs, 0.50)
             out[f"{name}.p95"] = _quantile(vs, 0.95)
+            out[f"{name}.p99"] = _quantile(vs, 0.99)
             out[f"{name}.max"] = vs[-1] if vs else 0.0
             out[f"{name}.sum"] = sum(vs)
         return out

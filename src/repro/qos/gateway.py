@@ -191,7 +191,7 @@ class ScanGateway:
                  lease_batches: int = 1, prefetch: bool = True,
                  est_service_s_per_cost: float = 1e-4,
                  scheduler: AdaptiveScheduler | None = None,
-                 tracer=None):
+                 tracer=None, modeled_service: bool = False):
         self.coordinator = coordinator
         self.admission = admission
         self.pool = pool
@@ -199,6 +199,14 @@ class ScanGateway:
         self.prefetch = prefetch
         self.scheduler = scheduler
         self.tracer = tracer            # obs.Tracer; None = tracing off
+        # modeled_service: advance the gateway clock by each stream's
+        # fabric-modeled wire time instead of its measured transport clock.
+        # The measured clock folds in host CPU (allocation, reassembly), so
+        # grant latencies jitter run-to-run; the modeled clock is a pure
+        # function of the fabric config and the scan shape, which is what a
+        # determinism-asserting scenario (stress) needs. Off by default:
+        # throughput scenarios deliberately measure the host.
+        self.modeled_service = modeled_service
         self.queue = WeightedFairQueue(classes) if fair else FifoQueue()
         self.stats = QosStats()
         self.results: dict[int, ScanResult] = {}
@@ -275,9 +283,15 @@ class ScanGateway:
         With ``start_s`` (the grant instant), freed-slot events after it
         open extra lanes mid-service (gateway re-planning): slots released
         before the grant are already reflected in the occupancy-derived
-        lane count, so they are pruned rather than double-counted."""
-        finish = max((s.start_s + s.clock_s for s in streams), default=0.0)
-        durations = [s.clock_s for s in streams]
+        lane count, so they are pruned rather than double-counted.
+
+        Under ``modeled_service`` each stream contributes its
+        fabric-modeled wire time rather than its measured transport clock,
+        making the whole computation deterministic (see ``__init__``)."""
+        durations = [s.modeled_wire_s if self.modeled_service else s.clock_s
+                     for s in streams]
+        finish = max((s.start_s + d for s, d in zip(streams, durations)),
+                     default=0.0)
         if self._replan_events:
             # events at or before the service window's start are already
             # reflected in the controller's occupancy — drop them (the

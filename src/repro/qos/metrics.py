@@ -51,6 +51,18 @@ class ClassStats:
         return _quantile(self.grant_latency_s, 0.5)
 
     @property
+    def p99_grant_latency_s(self) -> float:
+        return _quantile(self.grant_latency_s, 0.99)
+
+    @property
+    def mean_grant_latency_s(self) -> float:
+        """Mean grant latency; 0.0 with no samples (a class that was shed
+        wholesale must not take the report down)."""
+        if not self.grant_latency_s:
+            return 0.0
+        return sum(self.grant_latency_s) / len(self.grant_latency_s)
+
+    @property
     def max_grant_latency_s(self) -> float:
         return max(self.grant_latency_s, default=0.0)
 
@@ -58,6 +70,14 @@ class ClassStats:
     def throughput_bytes_per_s(self) -> float:
         """Class throughput over the service time it actually consumed."""
         return self.bytes / self.service_s if self.service_s > 0 else 0.0
+
+    def throughput_over(self, duration_s: float) -> float:
+        """Bytes per second over an externally chosen modeled window (the
+        stress driver's fairness window). A zero-width window — a burst
+        whose every request shed before any service ran, or a driver
+        queried before its first beat — reports 0.0 rather than dividing
+        by zero."""
+        return self.bytes / duration_s if duration_s > 0 else 0.0
 
     def merge(self, other: "ClassStats") -> "ClassStats":
         """Fold another run's view of the same class into this one:

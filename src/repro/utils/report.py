@@ -241,6 +241,38 @@ def health_table(monitor) -> str:
     return f"{table}\n{footer}"
 
 
+def workload_table(driver) -> str:
+    """Per-population markdown table for an ``obs.StressDriver`` — grants,
+    causally attributed deadline sheds vs admission declines, grant-latency
+    p50/p99 and window throughput — with the cross-population fairness
+    verdict (Jain's index, latency inflation) in the footer. Duck-typed on
+    the driver's ``populations``/``gateway.stats``/``fairness()`` surface
+    so this module stays dependency-free."""
+    fair = driver.fairness()
+    window_s = driver.window_s
+    rows = []
+    for pop in driver.populations:
+        c = driver.gateway.stats.classes.get(pop.name)
+        if c is None or c.submitted == 0:
+            rows.append([pop.name, "0/0", 0, 0, "-", "-", "-"])
+            continue
+        rows.append([
+            pop.name, f"{c.granted}/{c.submitted}",
+            driver.sheds.get(pop.name, 0),
+            driver.declines.get(pop.name, 0),
+            f"{c.p50_grant_latency_s * 1e6:.1f}",
+            f"{c.p99_grant_latency_s * 1e6:.1f}",
+            f"{c.throughput_over(window_s) / 1e6:.1f}",
+        ])
+    table = render_table(
+        ["population", "granted", "shed", "declined", "p50 grant us",
+         "p99 grant us", "throughput MB/s"], rows)
+    footer = (f"jain={fair['jain']:.3f} "
+              f"latency_inflation={fair['latency_inflation']:.2f} "
+              f"beats={driver.beats} window_us={window_s * 1e6:.1f}")
+    return f"{table}\n{footer}"
+
+
 def export_trace(tracer, path: str) -> str:
     """Write an ``obs.Tracer``'s collected scans as Chrome ``trace_event``
     JSON (load in ``chrome://tracing`` or https://ui.perfetto.dev).

@@ -1,0 +1,275 @@
+"""repro.obs workload layer: seeded client populations, side workloads and
+the stress driver — determinism (same seed => identical submit schedule and
+registry snapshot), Jain fairness bounds, conformance of the population
+machinery to the scripted bench shapes, rate-metric zero-window guards, and
+causal shed/decline attribution through a wired gateway."""
+import zlib
+
+import numpy as np
+import pytest
+from conftest import make_coordinator
+
+from repro.cluster import ClusterCoordinator
+from repro.core import Fabric, FabricConfig, ThallusServer
+from repro.engine import Engine, make_numeric_table
+from repro.obs import (ClientPopulation, FlightRecorder, InteractiveSideLoad,
+                       MetricsRegistry, PopulationSideWorkload, StressDriver,
+                       jain_index, population_classes, record_workload)
+from repro.qos import (AdmissionConfig, DistributedConfig, ScanGateway,
+                       ShardedAdmission)
+from repro.qos.metrics import ClassStats
+
+pytestmark = pytest.mark.obs
+
+LIGHT_SQL = "SELECT c0 FROM t"
+
+
+# ------------------------------------------------------------ jain fairness
+
+
+def test_jain_bounds_and_degenerate_inputs():
+    # degenerate allocations are fair by definition
+    assert jain_index([]) == 1.0
+    assert jain_index([0.0, 0.0, 0.0]) == 1.0          # zero-throughput mix
+    assert jain_index([42.0]) == 1.0                   # a single population
+    # perfect equality
+    assert jain_index([3.0, 3.0, 3.0, 3.0]) == pytest.approx(1.0)
+    # one class hogging everything: the 1/n lower bound
+    assert jain_index([10.0, 0.0, 0.0, 0.0]) == pytest.approx(0.25)
+    # monotone: skew strictly lowers the index
+    assert jain_index([4.0, 1.0, 1.0, 1.0]) < jain_index([2.0, 1.0, 1.0, 1.0])
+    # negative readings clamp instead of inflating the numerator
+    assert jain_index([-1.0, 1.0]) == jain_index([0.0, 1.0])
+
+
+# ----------------------------------------------------- zero-duration guards
+
+
+def test_rate_properties_survive_zero_modeled_duration():
+    """A class whose every request shed before any service ran has bytes
+    and samples but zero modeled duration — every rate/percentile property
+    must report 0.0, not divide by zero."""
+    c = ClassStats("batch")
+    c.bytes = 1 << 20
+    c.service_s = 0.0
+    assert c.throughput_bytes_per_s == 0.0
+    assert c.throughput_over(0.0) == 0.0
+    assert c.throughput_over(-1.0) == 0.0
+    assert c.mean_grant_latency_s == 0.0               # no samples either
+    assert c.p50_grant_latency_s == 0.0
+    # and a real window still divides
+    assert c.throughput_over(2.0) == pytest.approx((1 << 20) / 2.0)
+
+
+# ----------------------------------------------------- populations: drawing
+
+
+def test_population_draw_processes_and_windows():
+    rng = np.random.default_rng(0)
+    burst = ClientPopulation("b", arrival="burst", rate_per_beat=3.0)
+    kws = burst.draw(rng, 1.0, 2.0)
+    assert [k["arrival_s"] for k in kws] == [2.0, 2.0, 2.0]
+    uniform = ClientPopulation("u", arrival="uniform", rate_per_beat=4.0)
+    kws = uniform.draw(rng, 0.0, 1.0)
+    assert [k["arrival_s"] for k in kws] == [0.25, 0.5, 0.75, 1.0]
+    poisson = ClientPopulation("p", arrival="poisson", rate_per_beat=5.0,
+                               cost_jitter=0.2)
+    kws = poisson.draw(rng, 0.0, 1.0)
+    assert all(0.0 <= k["arrival_s"] <= 1.0 for k in kws)
+    assert kws == sorted(kws, key=lambda k: k["arrival_s"])
+    assert all(k["cost_hint"] > 0 for k in kws)
+
+
+def test_population_validation_and_activation():
+    with pytest.raises(ValueError):
+        ClientPopulation("x", arrival="weibull")
+    with pytest.raises(ValueError):
+        ClientPopulation("x", rate_per_beat=-1.0)
+    p = ClientPopulation("x", start_beat=2, stop_beat=4)
+    assert [p.active(b) for b in range(5)] == [False, False, True, True,
+                                               False]
+
+
+class _RecordingGateway:
+    """Duck-typed gateway stub: captures submitted requests verbatim."""
+
+    def __init__(self, clock_s: float = 0.0):
+        self.clock_s = clock_s
+        self.requests = []
+
+    def submit(self, request):
+        self.requests.append(request)
+        return request
+
+
+def test_same_seed_replays_identical_schedule():
+    pop = ClientPopulation("storm", arrival="poisson", rate_per_beat=4.0,
+                           cost_jitter=0.3, num_streams=2)
+    schedules = []
+    for _ in range(2):
+        gw = _RecordingGateway()
+        load = PopulationSideWorkload(pop, seed=9)
+        for clock in (0.0, 1.0, 2.5, 4.0):
+            gw.clock_s = clock
+            load.submit(gw)
+        schedules.append(load.schedule)
+    assert schedules[0] == schedules[1]
+    # a different seed draws a different storm
+    gw = _RecordingGateway()
+    other = PopulationSideWorkload(pop, seed=10)
+    for clock in (0.0, 1.0, 2.5, 4.0):
+        gw.clock_s = clock
+        other.submit(gw)
+    assert other.schedule != schedules[0]
+
+
+def test_population_seed_streams_are_name_scoped():
+    """Two same-seed populations with different names draw independent
+    streams (the rng key folds in crc32(name))."""
+    a = PopulationSideWorkload(
+        ClientPopulation("a", arrival="poisson", rate_per_beat=4.0), seed=3)
+    b = PopulationSideWorkload(
+        ClientPopulation("b", arrival="poisson", rate_per_beat=4.0), seed=3)
+    assert zlib.crc32(b"a") != zlib.crc32(b"b")
+    gw_a, gw_b = _RecordingGateway(), _RecordingGateway()
+    for clock in (1.0, 2.0, 3.0):
+        gw_a.clock_s = gw_b.clock_s = clock
+        a.submit(gw_a)
+        b.submit(gw_b)
+    offsets_a = [k["arrival_s"] for k in a.schedule]
+    offsets_b = [k["arrival_s"] for k in b.schedule]
+    assert offsets_a != offsets_b
+
+
+# ----------------------------------------------- conformance to bench shapes
+
+
+def test_single_population_degenerates_to_contention_mix():
+    """One burst interactive population IS the scripted contention shape:
+    ``transport_bench._submit_contention_mix`` submits 6 interactive
+    lookups (client ``ui``, LIGHT_SQL, cost 1.0) at the current clock —
+    the population machinery must reproduce that submit stream exactly."""
+    gw = _RecordingGateway(clock_s=0.125)
+    load = PopulationSideWorkload(ClientPopulation(
+        "interactive", arrival="burst", rate_per_beat=6.0, sql=LIGHT_SQL,
+        cost_hint=1.0, client_id="ui"), seed=0)
+    load.submit(gw)
+    assert len(gw.requests) == 6
+    for r in gw.requests:
+        assert (r.client_id, r.klass, r.sql, r.dataset) == (
+            "ui", "interactive", LIGHT_SQL, "/d")
+        assert r.cost_hint == 1.0
+        assert r.deadline_s is None
+        assert r.num_streams is None
+        assert r.arrival_s == 0.125                    # burst: at the clock
+
+
+def test_interactive_side_load_is_the_submit_side_load_shape():
+    """``InteractiveSideLoad`` is the single implementation behind
+    ``transport_bench.submit_side_load``: two light interactive lookups
+    from client ``side`` stamped on the gateway's current clock."""
+    gw = _RecordingGateway(clock_s=2.0)
+    reqs = InteractiveSideLoad(LIGHT_SQL, "/d").submit(gw)
+    assert len(reqs) == len(gw.requests) == 2
+    for r in gw.requests:
+        assert (r.client_id, r.klass, r.sql) == ("side", "interactive",
+                                                 LIGHT_SQL)
+        assert r.arrival_s == 2.0 and r.num_streams == 2
+
+
+def test_side_workload_window_cursor_never_stamps_the_future():
+    """Swapping in a fresh gateway (clock restarts at 0) must clamp the
+    window: arrivals are never stamped after the submit instant."""
+    pop = ClientPopulation("u", arrival="uniform", rate_per_beat=2.0)
+    load = PopulationSideWorkload(pop, seed=0)
+    gw = _RecordingGateway(clock_s=5.0)
+    load.submit(gw)
+    fresh = _RecordingGateway(clock_s=0.5)              # new modeled epoch
+    load.submit(fresh)
+    assert all(r.arrival_s <= 0.5 for r in fresh.requests)
+
+
+# --------------------------------------------------- the driver, end to end
+
+
+def _stress_cluster(populations, recorder):
+    ids = ["s0", "s1", "s2"]
+    table = make_numeric_table("t", 6 * 1024, 4, batch_rows=1024)
+    admission = ShardedAdmission(
+        AdmissionConfig(max_streams_total=2 * len(ids)), ids,
+        dist=DistributedConfig(borrow_limit=0))
+    coord = ClusterCoordinator(admission=admission, recorder=recorder)
+    for sid in ids:
+        coord.add_server(sid, ThallusServer(Engine(), Fabric(FabricConfig())))
+    coord.place_replicas("/d", table)
+    return ScanGateway(coord, classes=population_classes(populations),
+                       modeled_service=True)
+
+
+def test_driver_same_seed_identical_registry_snapshot():
+    def one_run():
+        pops = [
+            ClientPopulation("interactive", weight=4.0, arrival="uniform",
+                             rate_per_beat=2.0, sql=LIGHT_SQL,
+                             num_streams=2),
+            ClientPopulation("storm", weight=1.0, arrival="poisson",
+                             rate_per_beat=3.0, sql=LIGHT_SQL, cost_hint=4.0,
+                             cost_jitter=0.3, num_streams=2),
+        ]
+        driver = StressDriver(_stress_cluster(pops, FlightRecorder()), pops,
+                              seed=21)
+        for _ in range(4):
+            driver.beat()
+        return ([lo.schedule for lo in driver.loads],
+                driver.registry.snapshot())
+
+    (sched_a, snap_a), (sched_b, snap_b) = one_run(), one_run()
+    assert sched_a == sched_b
+    assert snap_a == snap_b
+    assert snap_a["workload.interactive.submitted"] == 8
+    assert "workload.interactive.grant_latency.p99" in snap_a
+    assert "workload.fairness.jain" in snap_a
+
+
+def test_driver_attributes_sheds_and_squatter_declines():
+    """Causal attribution end to end: an impossible deadline sheds the
+    interactive class (``qos.shed``), and a squatter holding both of one
+    replica-pair server's slots forces the other tenant's fan-outs to
+    decline (``qos.backpressure``) — each charged to the right population
+    via the flight-recorder window."""
+    recorder = FlightRecorder()
+    pops = [
+        ClientPopulation("interactive", weight=4.0, arrival="uniform",
+                         rate_per_beat=2.0, sql=LIGHT_SQL, num_streams=2,
+                         deadline_s=1e-9),
+        # replica placement with num_streams=2 lands on sorted-first
+        # {s0, s1}; the squatter pins both s0 slots (per-server slice = 2)
+        ClientPopulation("squatter", rate_per_beat=0.0,
+                         squat_servers=("s0", "s0")),
+    ]
+    driver = StressDriver(_stress_cluster(pops, recorder), pops, seed=5)
+    reports = [driver.beat() for _ in range(3)]
+    # beat 0's window is empty (uniform arrivals land on the clock) —
+    # later beats carry positive waits that bust the 1ns deadline
+    assert driver.sheds["interactive"] >= 1
+    assert driver.declines["interactive"] >= 1
+    assert driver.sheds.get("squatter", 0) == 0
+    assert sum(r.shed + r.declined for r in reports) >= 1
+    kinds = {e.kind for e in recorder.events()}
+    assert "qos.backpressure" in kinds
+    snap = driver.registry.snapshot()
+    assert snap["workload.interactive.declines"] == (
+        driver.declines["interactive"])
+
+
+def test_record_workload_zero_beats_is_all_zeros():
+    """A driver queried before its first beat: zero window, no samples —
+    the registry must come out finite and the fairness degenerate-fair."""
+    pops = [ClientPopulation("interactive", sql=LIGHT_SQL, num_streams=2)]
+    driver = StressDriver(_stress_cluster(pops, FlightRecorder()), pops)
+    reg = MetricsRegistry()
+    record_workload(reg, driver)
+    snap = reg.snapshot()
+    assert snap["workload.fairness.jain"] == 1.0
+    assert snap["workload.fairness.latency_inflation"] == 1.0
+    assert snap["workload.window.us"] == 0.0

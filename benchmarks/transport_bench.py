@@ -93,7 +93,8 @@ if __package__ in (None, ""):          # `python benchmarks/transport_bench.py`
 else:
     from .common import Row, calibrated_fabric
 
-from repro.cluster import (BufferPool, ClusterCoordinator, MultiStreamPuller,
+from repro.cluster import (BufferPool, ClusterCoordinator, FaultSpec,
+                           MembershipController, MultiStreamPuller, Nemesis,
                            cluster_scan)
 from repro.core import (Fabric, FabricConfig, FlappingFabric, RpcClient,
                         ThallusClient, ThallusServer)
@@ -1126,6 +1127,268 @@ def run_stress() -> list[Row]:
     return rows
 
 
+NEMESIS_HEARTBEAT_BUDGET = 8  # beats allowed between a fault and its page /
+                              # evict / re-admit (the bounded-recovery SLO)
+NEMESIS_CLEAN_BEATS = 6       # armed clean beats before the schedule starts
+NEMESIS_SEED = 11
+NEMESIS_POSTMORTEM_PATH = os.path.join("artifacts", "postmortem",
+                                       "nemesis_postmortem.json")
+
+
+def run_nemesis() -> list[Row]:
+    """Elastic membership under a seeded nemesis schedule, self-asserting.
+
+    The PR 8 stress populations (interactive 2-stream lookups + one heavy
+    3-stream batch scan per beat) drive a 5-replica cluster while a
+    deterministic :class:`repro.cluster.Nemesis` injects the three fault
+    kinds on a fixed schedule:
+
+    * ``slow``  — ``s1`` (a serving replica of every 2-stream plan) loses
+      8× bandwidth for four beats: the interactive latency objective pages;
+    * ``partition`` — ``s2``'s admission shard stops reconciling for two
+      beats (overlapping the slow fault);
+    * ``kill``  — ``s0`` dies MID-LEASE (``after_batches=1``): in-flight
+      leases migrate to a surviving replica via
+      ``init_scan(start_batch=delivered)``, the fault storm quarantines
+      ``s0``, the :class:`~repro.cluster.MembershipController` evicts it
+      (placement repair + admission shard absorbed), and after the nemesis
+      heals it the hysteretic health recovery re-admits it.
+
+    Asserts: ZERO alerts in the clean phase; a ``nemesis-*`` objective
+    pages within ``NEMESIS_HEARTBEAT_BUDGET`` beats of the first fault;
+    evict lands within the budget of the kill and re-admit within the
+    budget of the heal; at least one lease actually migrated; EVERY granted
+    scan across the whole run delivered its full result byte-identical to a
+    direct single-server evaluation (exactly-once through crash, failover,
+    eviction and re-admission); and the dumped postmortem carries the
+    causal ``nemesis.inject`` → ``stream.migrate`` → ``membership.evict``
+    chain plus the membership transition log. Fixed ``FabricConfig`` +
+    seeded populations + a literal schedule: the fault timeline and every
+    judged number replay identically run over run.
+    """
+    base = FabricConfig()
+    ids = ["s0", "s1", "s2", "s3", "s4"]
+    EXPECTED_BATCHES = 24
+    table = make_numeric_table("t", EXPECTED_BATCHES * (1 << 13), 4,
+                               batch_rows=1 << 13)
+    heavy_sql = "SELECT c0, c1, c2, c3 FROM t"
+
+    recorder = FlightRecorder(capacity=2048)
+    health = HealthMonitor(recorder=recorder)
+    engine = SloEngine()
+    tracer = Tracer()
+
+    def base_populations():
+        # the stress mix minus storm/squatter/deadline: every granted scan
+        # must COMPLETE (exactly-once is the point), so nothing is shed
+        return [
+            ClientPopulation("interactive", weight=4.0, arrival="uniform",
+                             rate_per_beat=3.0, sql=LIGHT_SQL,
+                             cost_hint=1.0, num_streams=2),
+            ClientPopulation("batch", weight=1.0, arrival="burst",
+                             rate_per_beat=1.0, sql=heavy_sql,
+                             cost_hint=8.0, num_streams=3),
+        ]
+
+    def make_gateway(populations, est_service_s_per_cost=1e-4):
+        # 3 slots/shard + borrow headroom so a migrating lease can release
+        # its dead shard's slot and re-acquire on the target without a
+        # spurious Backpressure mid-failover
+        admission = ShardedAdmission(
+            AdmissionConfig(max_streams_total=3 * len(ids)), ids,
+            dist=DistributedConfig(borrow_limit=2))
+        admission.recorder = recorder
+        coord = ClusterCoordinator(admission=admission, recorder=recorder,
+                                   health=health)
+        for sid in ids:
+            coord.add_server(sid, ThallusServer(Engine(), Fabric(base)))
+        coord.place_replicas("/d", table)
+        health.bind(admission=admission)
+        gw = ScanGateway(coord, classes=population_classes(populations),
+                         tracer=tracer, modeled_service=True,
+                         est_service_s_per_cost=est_service_s_per_cost)
+        return gw, admission, coord
+
+    # ---- ground truth: one engine pass per sql, no cluster in the loop --
+    def reference(sql):
+        reader = coordinatorless_engine.execute(sql, "/d")
+        out = []
+        while (b := reader.read_next()) is not None:
+            out.append(b)
+        return out
+
+    coordinatorless_engine = Engine()
+    coordinatorless_engine.register("/d", table)
+
+    def signature(batches):
+        return [tuple(c.values.tobytes() for c in b.columns)
+                for b in batches]
+
+    ref_sig = {sql: signature(reference(sql))
+               for sql in (LIGHT_SQL, heavy_sql)}
+
+    # ---- phase 1: calibrate the clean mix on a probe gateway ------------
+    calib_pops = base_populations()
+    calib_gw, _, _ = make_gateway(calib_pops)
+    calib = StressDriver(calib_gw, calib_pops, seed=NEMESIS_SEED,
+                         recorder=recorder)
+    clean_p50s_us = []
+    for _ in range(3):
+        calib.beat()
+        clean_p50s_us.append(
+            calib.beat_stats["interactive"]["p50_grant_us"])
+    dt = calib.window_s / 3.0
+    clean_p50_us = sorted(clean_p50s_us)[1]
+    cost_per_beat = sum(p.rate_per_beat * p.cost_hint for p in calib_pops)
+    service_per_cost = dt / cost_per_beat
+    assert not calib.alerts and calib.sheds.get("interactive", 0) == 0
+
+    # ---- phase 2+3: armed run under the literal nemesis schedule --------
+    SLOW_BEAT = NEMESIS_CLEAN_BEATS            # s1 slow, 4 beats
+    PART_BEAT = NEMESIS_CLEAN_BEATS + 1        # s2 partition, 2 beats
+    KILL_BEAT = NEMESIS_CLEAN_BEATS + 3        # s0 mid-lease death
+    HEAL_BEAT = KILL_BEAT + 6                  # s0 process back up
+    TOTAL_BEATS = NEMESIS_CLEAN_BEATS + 18
+    schedule = (
+        FaultSpec("slow", "s1", SLOW_BEAT, stop_beat=SLOW_BEAT + 4,
+                  factor=8.0),
+        FaultSpec("partition", "s2", PART_BEAT, stop_beat=PART_BEAT + 2),
+        FaultSpec("kill", "s0", KILL_BEAT, stop_beat=HEAL_BEAT,
+                  after_batches=1),
+    )
+    populations = base_populations()
+    gw, admission, coord = make_gateway(populations, service_per_cost)
+    nemesis = Nemesis(coord, schedule, admission=admission)
+    membership = MembershipController(coord, health, admission=admission)
+
+    long_s, short_s = 12.0 * dt, 1.5 * dt
+    engine.add(SloObjective(
+        "nemesis-interactive-latency",
+        "workload.interactive.beat.p50_grant_us",
+        target=1.3 * clean_p50_us, better="lower", goal=0.75,
+        windows=((long_s, 1.2), (short_s, 1.2)), min_samples=3))
+    engine.add(SloObjective(
+        "nemesis-migrations", "workload.beat.migrations",
+        target=0.5, better="lower", goal=0.75,
+        windows=((long_s, 1.2), (short_s, 1.2)), min_samples=3))
+    driver = StressDriver(gw, populations, seed=NEMESIS_SEED, slo=engine,
+                          recorder=recorder, nemesis=nemesis,
+                          membership=membership)
+    dumped: list[str] = []
+    engine.subscribe(lambda alert: dumped.append(recorder.dump(
+        NEMESIS_POSTMORTEM_PATH, trigger=alert, registry=driver.registry,
+        health=health, tracer=tracer, membership=membership, last_n=256)))
+
+    for _ in range(NEMESIS_CLEAN_BEATS):
+        driver.beat()
+    false_alerts = len(driver.alerts)
+
+    first_alert, page_beat = None, None
+    evict_beat, readmit_beat = None, None
+    for index in range(NEMESIS_CLEAN_BEATS, TOTAL_BEATS):
+        report = driver.beat()
+        if report.alerts and page_beat is None:
+            first_alert, page_beat = report.alerts[0], index
+        for ev in report.membership:
+            if ev.action == "evict" and ev.server_id == "s0" \
+                    and evict_beat is None:
+                evict_beat = index
+            if ev.action == "readmit" and ev.server_id == "s0" \
+                    and readmit_beat is None:
+                readmit_beat = index
+
+    # the authoritative bundle: dumped AFTER the full chain has played out,
+    # so the event window provably carries inject → migrate → evict
+    final_dump = recorder.dump(
+        NEMESIS_POSTMORTEM_PATH, trigger=first_alert, registry=driver.registry,
+        health=health, tracer=tracer, membership=membership, last_n=256)
+
+    # ---- verdicts -------------------------------------------------------
+    assert false_alerts == 0, (
+        f"{false_alerts} alert(s) fired on the calibrated clean beats")
+    assert first_alert is not None, (
+        f"no nemesis objective paged within the fault phase "
+        f"(clean p50 {clean_p50_us:.1f}us, dt {dt * 1e6:.1f}us)")
+    assert first_alert.objective.startswith("nemesis-"), (
+        f"wrong objective paged: {first_alert.objective}")
+    assert page_beat - SLOW_BEAT <= NEMESIS_HEARTBEAT_BUDGET, (
+        f"page at beat {page_beat}, fault at {SLOW_BEAT}: recovery SLO blown")
+    assert evict_beat is not None, "s0 was never evicted after its kill"
+    assert evict_beat - KILL_BEAT <= NEMESIS_HEARTBEAT_BUDGET, (
+        f"evict at beat {evict_beat}, kill at {KILL_BEAT}")
+    assert readmit_beat is not None, "s0 was never re-admitted after healing"
+    assert readmit_beat - HEAL_BEAT <= NEMESIS_HEARTBEAT_BUDGET, (
+        f"readmit at beat {readmit_beat}, heal at {HEAL_BEAT}")
+    assert driver.migrations >= 1, "the mid-lease kill migrated no lease"
+    assert "s0" not in membership.evicted, "s0 still out at run end"
+
+    # exactly-once byte-identical delivery for EVERY granted scan
+    checked = 0
+    for result in gw.results.values():
+        want = ref_sig[result.request.sql]
+        got = signature(result.batches)
+        assert got == want, (
+            f"scan #{result.request.request_id} ({result.request.sql!r}) "
+            f"delivered {len(got)} batch(es), wanted {len(want)} "
+            f"byte-identical")
+        checked += 1
+    for p in populations:
+        c = driver.gateway.stats.classes.get(p.name)
+        assert c is not None and c.granted == c.submitted, (
+            f"{p.name}: {c.submitted - c.granted} scan(s) lost "
+            f"(submitted={c.submitted} granted={c.granted})")
+    assert checked == sum(
+        driver.gateway.stats.classes[p.name].granted for p in populations)
+
+    import json as _json
+    with open(final_dump) as f:
+        bundle = _json.load(f)
+    for kind in ("nemesis.inject", "stream.migrate", "membership.evict",
+                 "membership.readmit", "placement.repair"):
+        assert any(e["kind"] == kind for e in bundle["events"]), (
+            f"postmortem event window lost the causal {kind} "
+            f"(counts={bundle['event_counts']})")
+    assert bundle["membership"]["events"], "no membership transition log"
+    assert dumped and os.path.exists(dumped[0]), (
+        "the page never dumped a postmortem")
+
+    _metric("nemesis_alert_latency_beats", page_beat - SLOW_BEAT,
+            ceiling=NEMESIS_HEARTBEAT_BUDGET, better="lower",
+            detail="beats from first fault to the page")
+    _metric("nemesis_false_alerts", false_alerts, ceiling=0,
+            detail="alerts fired during the calibrated clean beats")
+    _metric("nemesis_evict_latency_beats", evict_beat - KILL_BEAT,
+            ceiling=NEMESIS_HEARTBEAT_BUDGET, better="lower",
+            detail="beats from the kill to the eviction")
+    _metric("nemesis_readmit_latency_beats", readmit_beat - HEAL_BEAT,
+            ceiling=NEMESIS_HEARTBEAT_BUDGET, better="lower",
+            detail="beats from the heal to the re-admission")
+    # deterministic geometry: tight envelope drift detectors
+    _metric("nemesis_migrations", float(driver.migrations), floor=1,
+            better="higher")
+    _metric("nemesis_scans_delivered", float(checked), better="higher")
+
+    rows: list[Row] = []
+    for p in populations:
+        c = driver.gateway.stats.classes[p.name]
+        rows.append(Row(
+            f"nemesis_{p.name}", c.p50_grant_latency_s * 1e6,
+            f"granted={c.granted}/{c.submitted} "
+            f"migrations={driver.migrations} "
+            f"tput_MBps={c.throughput_over(driver.window_s) / 1e6:.1f}"))
+    rows.append(Row(
+        "nemesis_alert_latency", float(page_beat - SLOW_BEAT),
+        f"budget={NEMESIS_HEARTBEAT_BUDGET} objective={first_alert.objective} "
+        f"page_beat={page_beat} fault_beat={SLOW_BEAT} "
+        f"postmortem={final_dump}"))
+    rows.append(Row(
+        "nemesis_membership", float(readmit_beat - KILL_BEAT),
+        f"kill={KILL_BEAT} evict={evict_beat} heal={HEAL_BEAT} "
+        f"readmit={readmit_beat} scans={checked} "
+        f"timeline={len(nemesis.timeline)}ev false_alerts={false_alerts}"))
+    return rows
+
+
 _SCENARIOS = {
     "fig2": lambda transport, side_load=False: run(transport),
     "cluster": lambda transport, side_load=False: run_cluster(),
@@ -1137,6 +1400,7 @@ _SCENARIOS = {
     "flap": lambda transport, side_load=False: run_flap(side_load=side_load),
     "slo": lambda transport, side_load=False: run_slo(side_load=side_load),
     "stress": lambda transport, side_load=False: run_stress(),
+    "nemesis": lambda transport, side_load=False: run_nemesis(),
 }
 
 
@@ -1165,7 +1429,7 @@ def main() -> int:
     elif args.scenario == "all":
         # fig2 already appends cluster
         scenarios = ["fig2", "contention", "straggler", "sharing",
-                     "admission", "flap", "slo", "stress"]
+                     "admission", "flap", "slo", "stress", "nemesis"]
     elif args.scenario is not None:
         scenarios = [args.scenario]
     else:

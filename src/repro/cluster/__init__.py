@@ -12,8 +12,12 @@ from __future__ import annotations
 from typing import Callable
 
 from ..core.recordbatch import RecordBatch
-from .coordinator import ClusterCoordinator  # noqa: F401
+from .coordinator import (  # noqa: F401
+    ClusterCoordinator, MigrationError, PlacementError,
+)
+from .membership import MembershipController, MembershipEvent  # noqa: F401
 from .mempool import BufferPool, PoolStats, size_class  # noqa: F401
+from .nemesis import FaultSpec, Nemesis, seeded_schedule  # noqa: F401
 from .plan import Endpoint, ScanPlan, plan_scan, probe_batches  # noqa: F401
 from .streams import (  # noqa: F401
     ClusterStats, MultiStreamPuller, StreamPuller, StreamStats,

@@ -42,10 +42,29 @@ from ..engine.table import Table
 from .plan import Endpoint, ScanPlan, plan_scan
 
 
+class PlacementError(KeyError):
+    """No registered server can serve the dataset — every host named by the
+    recorded placement has left the cluster (or none was ever registered)."""
+
+
+class MigrationError(RuntimeError):
+    """A stream lease cannot fail over: no surviving replica hosts the
+    dataset (shard placements hold disjoint data — a dead shard's rows have
+    no second home until re-placement repairs the map)."""
+
+
+# health states, worst-last — used only to *order* failover candidates, so
+# the coordinator stays duck-typed on the monitor (no cluster→obs import)
+_HEALTH_RANK = {"healthy": 0, "degraded": 1, "suspect": 2, "quarantined": 3}
+
+
 @dataclasses.dataclass
 class _Placement:
     mode: str                      # "shard" | "replica"
     server_ids: tuple[str, ...]
+    table: Table | None = None     # source table, for membership re-placement
+    # shard mode: server_id → dataset-global batch indices its shard holds
+    assignment: dict[str, tuple[int, ...]] | None = None
 
 
 class ClusterCoordinator:
@@ -81,10 +100,110 @@ class ClusterCoordinator:
         return self.health.heartbeat(now_s)
 
     # ------------------------------------------------------------ registry
-    def add_server(self, server_id: str, server: ThallusServer) -> None:
+    def add_server(self, server_id: str, server: ThallusServer, *,
+                   rebalance: bool = False, now_s: float = 0.0) -> None:
+        """Register a server. With ``rebalance=True`` (a live *join*), every
+        recorded placement is repaired to put the joiner to work: replica
+        datasets get a full copy registered on it, shard datasets hand it a
+        minimal-movement slice (only ``⌊batches/n⌋`` batches move, taken one
+        at a time from the currently-largest shards)."""
         if server_id in self.servers:
             raise ValueError(f"server id {server_id!r} already registered")
         self.servers[server_id] = server
+        if rebalance:
+            for dataset, placement in self._placements.items():
+                if server_id in placement.server_ids:
+                    continue
+                if placement.table is None:
+                    continue   # legacy placement with no stored source table
+                if placement.mode == "replica":
+                    server.engine.register(dataset, placement.table)
+                    placement.server_ids = tuple(
+                        sorted((*placement.server_ids, server_id)))
+                    self.notify("placement.repair", server_id=server_id,
+                                now_s=now_s, dataset=dataset, mode="replica",
+                                action="join")
+                else:
+                    self._join_shard(dataset, placement, server_id, now_s)
+
+    def remove_server(self, server_id: str, *,
+                      now_s: float = 0.0) -> ThallusServer:
+        """Deregister a server (a live *leave*/eviction) and repair every
+        placement naming it: replica placements just drop the host; shard
+        placements re-deal the orphaned shard's batches across the smallest
+        surviving shards (survivors keep everything they already hold —
+        minimal movement). Returns the removed server so a membership
+        controller can stash it for re-admission."""
+        server = self.server(server_id)
+        del self.servers[server_id]
+        for dataset, placement in self._placements.items():
+            if server_id not in placement.server_ids:
+                continue
+            placement.server_ids = tuple(
+                sid for sid in placement.server_ids if sid != server_id)
+            if placement.mode == "shard" and placement.assignment is not None:
+                orphans = placement.assignment.pop(server_id, ())
+                self._redeal(dataset, placement, orphans)
+                self.notify("placement.repair", server_id=server_id,
+                            now_s=now_s, dataset=dataset, mode="shard",
+                            action="leave", moved=len(orphans))
+            else:
+                self.notify("placement.repair", server_id=server_id,
+                            now_s=now_s, dataset=dataset,
+                            mode=placement.mode, action="leave")
+        return server
+
+    def _join_shard(self, dataset: str, placement: _Placement,
+                    joiner: str, now_s: float) -> None:
+        """Hand a joining server a minimal-movement shard slice."""
+        assignment = placement.assignment
+        if assignment is None:
+            assignment = placement.assignment = {}
+        total = sum(len(v) for v in assignment.values())
+        want = total // (len(placement.server_ids) + 1)
+        taken: list[int] = []
+        for _ in range(want):
+            # take one batch from the largest donor shard (deterministic
+            # tie-break: largest size, then highest server_id) — its
+            # highest global index, so donors keep their prefix
+            donor = max(assignment,
+                        key=lambda sid: (len(assignment[sid]), sid))
+            *keep, moved = assignment[donor]
+            assignment[donor] = tuple(keep)
+            taken.append(moved)
+            self._register_shard(dataset, placement, donor)
+        assignment[joiner] = tuple(sorted(taken))
+        placement.server_ids = tuple(sorted((*placement.server_ids, joiner)))
+        self._register_shard(dataset, placement, joiner)
+        self.notify("placement.repair", server_id=joiner, now_s=now_s,
+                    dataset=dataset, mode="shard", action="join",
+                    moved=len(taken))
+
+    def _redeal(self, dataset: str, placement: _Placement,
+                orphans: tuple[int, ...]) -> None:
+        """Deal orphaned global batch indices to the smallest surviving
+        shards (ties → lowest server_id), keeping each shard sorted."""
+        assignment = placement.assignment
+        if assignment is None or not placement.server_ids:
+            return
+        for idx in sorted(orphans):
+            target = min(placement.server_ids,
+                         key=lambda sid: (len(assignment.get(sid, ())), sid))
+            assignment[target] = tuple(sorted((*assignment.get(target, ()),
+                                               idx)))
+        for sid in placement.server_ids:
+            self._register_shard(dataset, placement, sid)
+
+    def _register_shard(self, dataset: str, placement: _Placement,
+                        server_id: str) -> None:
+        table = placement.table
+        if table is None or placement.assignment is None:
+            return
+        shard = Table(table.name, table.schema,
+                      batches=[table.batches[j]
+                               for j in placement.assignment.get(server_id,
+                                                                 ())])
+        self.server(server_id).engine.register(dataset, shard)
 
     def server(self, server_id: str) -> ThallusServer:
         if server_id not in self.servers:
@@ -93,10 +212,23 @@ class ClusterCoordinator:
 
     def hosts(self, dataset: str) -> dict[str, ThallusServer]:
         """Which servers host ``dataset``. Uses the recorded placement when
-        one exists, otherwise falls back to probing server catalogs."""
+        one exists, otherwise falls back to probing server catalogs.
+
+        A placement may name servers that have since left the cluster
+        (anything that bypassed :meth:`remove_server`'s repair); those are
+        dropped from the returned map — and reported as ``placement.stale``
+        — rather than raised, so one stale entry can't strand every scan of
+        the dataset. :meth:`plan` raises :class:`PlacementError` only when
+        *no* host survives."""
         placement = self._placements.get(dataset)
         if placement is not None:
-            return {sid: self.servers[sid] for sid in placement.server_ids}
+            missing = [sid for sid in placement.server_ids
+                       if sid not in self.servers]
+            for sid in missing:
+                self.notify("placement.stale", server_id=sid,
+                            dataset=dataset)
+            return {sid: self.servers[sid] for sid in placement.server_ids
+                    if sid in self.servers}
         found = {}
         for sid, server in self.servers.items():
             catalog = getattr(server.engine, "catalog", None)
@@ -116,11 +248,15 @@ class ClusterCoordinator:
         ids = sorted(server_ids or self.servers)
         if not ids:
             raise ValueError("no servers to place shards on")
+        assignment = {sid: tuple(range(i, len(table.batches), len(ids)))
+                      for i, sid in enumerate(ids)}
         for i, sid in enumerate(ids):
             shard = Table(table.name, table.schema,
                           batches=table.batches[i::len(ids)])
             self.server(sid).engine.register(dataset, shard)
-        self._placements[dataset] = _Placement("shard", tuple(ids))
+        self._placements[dataset] = _Placement("shard", tuple(ids),
+                                               table=table,
+                                               assignment=assignment)
 
     def place_replicas(self, dataset: str, table: Table,
                        server_ids: list[str] | None = None) -> None:
@@ -130,7 +266,8 @@ class ClusterCoordinator:
             raise ValueError("no servers to place replicas on")
         for sid in ids:
             self.server(sid).engine.register(dataset, table)
-        self._placements[dataset] = _Placement("replica", tuple(ids))
+        self._placements[dataset] = _Placement("replica", tuple(ids),
+                                               table=table)
 
     # ------------------------------------------------------------ planning
     def plan(self, sql: str, dataset: str,
@@ -138,10 +275,13 @@ class ClusterCoordinator:
              placement: str | None = None) -> ScanPlan:
         hosts = self.hosts(dataset)
         if not hosts:
-            raise KeyError(f"no server hosts dataset {dataset!r}")
+            raise PlacementError(f"no server hosts dataset {dataset!r}")
         mode = placement or self.placement_mode(dataset)
+        recorded = self._placements.get(dataset)
+        assignment = (recorded.assignment
+                      if recorded is not None and mode == "shard" else None)
         return plan_scan(sql, dataset, hosts, placement=mode,
-                         num_streams=num_streams)
+                         num_streams=num_streams, assignment=assignment)
 
     # ------------------------------------------------- stream lease lifecycle
     def open_stream(self, endpoint: Endpoint,
@@ -199,6 +339,69 @@ class ClusterCoordinator:
             endpoint.sql, endpoint.dataset,
             start_batch=endpoint.start_batch + delivered)
 
+    def failover_target(self, endpoint: Endpoint) -> str:
+        """Pick the surviving replica a dead server's stream migrates to.
+
+        Only replica placements can fail over — a shard's rows have no
+        second home. Candidates are the dataset's other registered,
+        non-crashed hosts, ordered best-health-first (ties broken by sorted
+        server_id so the choice is deterministic); raises
+        :class:`MigrationError` when none survives."""
+        placement = self._placements.get(endpoint.dataset)
+        if placement is None or placement.mode != "replica":
+            raise MigrationError(
+                f"stream on {endpoint.server_id!r} cannot fail over: "
+                f"dataset {endpoint.dataset!r} is not replica-placed")
+        candidates = [
+            sid for sid in placement.server_ids
+            if sid != endpoint.server_id and sid in self.servers
+            and not getattr(self.servers[sid], "crashed", False)]
+        if not candidates:
+            raise MigrationError(
+                f"no surviving replica hosts dataset {endpoint.dataset!r} "
+                f"(stream was on {endpoint.server_id!r})")
+        if self.health is not None:
+            state = getattr(self.health, "state", None)
+            if state is not None:
+                return min(candidates,
+                           key=lambda sid: (_HEALTH_RANK.get(state(sid), 0),
+                                            sid))
+        return min(candidates)
+
+    def failover_stream(self, endpoint: Endpoint, delivered: int,
+                        client_id: str = "default", *,
+                        slot_held: bool = True,
+                        now_s: float = 0.0) -> tuple[Endpoint, ScanHandle]:
+        """Migrate one stream lease off a dead/unregistered server.
+
+        When the endpoint's server is still alive this is exactly
+        :meth:`resume_stream` (same server, same slot). Otherwise the lease
+        moves to :meth:`failover_target`'s pick: the dead shard's admission
+        slot is released (when ``slot_held``), a fresh slot is acquired on
+        the target's shard, and the scan resumes mid-flight via
+        ``init_scan(start_batch=endpoint.start_batch + delivered)`` — the
+        delivered prefix is never re-shipped. Returns the re-targeted
+        endpoint (original ``start_batch``, so the caller's delivered-count
+        bookkeeping stays valid) plus the new handle, and reports
+        ``stream.migrate`` through the funnel."""
+        server = self.servers.get(endpoint.server_id)
+        if server is not None and not getattr(server, "crashed", False):
+            return endpoint, self.resume_stream(endpoint, delivered)
+        target = self.failover_target(endpoint)
+        if self.admission is not None and slot_held:
+            self.admission.release_stream(client_id,
+                                          server_id=endpoint.server_id,
+                                          now_s=now_s)
+        new_endpoint = dataclasses.replace(endpoint, server_id=target)
+        handle = self.open_stream(
+            dataclasses.replace(new_endpoint,
+                                start_batch=endpoint.start_batch + delivered),
+            client_id=client_id, now_s=now_s)
+        self.notify("stream.migrate", server_id=endpoint.server_id,
+                    now_s=now_s, to=target, delivered=delivered,
+                    client=client_id)
+        return new_endpoint, handle
+
     def reopen_stream(self, endpoint: Endpoint, delivered: int,
                       client_id: str = "default") -> ScanHandle:
         """Resume a *parked* stream (lease-boundary preemption, see
@@ -232,7 +435,10 @@ class ClusterCoordinator:
             trace.instant("stream.close", trace_now_s, cat="stream",
                           server=endpoint.server_id)
 
-    def reclaim_stale(self, older_than_s: float) -> int:
-        """Sweep abandoned leases across the whole cluster."""
-        return sum(s.reclaim_stale(older_than_s)
+    def reclaim_stale(self, older_than_s: float,
+                      now_s: float | None = None) -> int:
+        """Sweep abandoned leases across the whole cluster. ``now_s`` pins
+        the sweep to the modeled timeline (see
+        :meth:`ThallusServer.reclaim_stale`)."""
+        return sum(s.reclaim_stale(older_than_s, now_s=now_s)
                    for s in self.servers.values())

@@ -1,0 +1,148 @@
+"""Nemesis: a deterministic, scheduled fault injector for the cluster.
+
+Modeled on YDB's nemesis tooling (a tracker of *active* faults driven by a
+schedule, injected while a side workload keeps traffic flowing): each
+:class:`FaultSpec` names one fault — ``kill`` (the server process dies and
+its reader map with it), ``slow`` (its fabric loses bandwidth), or
+``partition`` (its admission shard stops reconciling) — with the beat it
+starts and, optionally, the beat it heals. :meth:`Nemesis.beat` is called
+once per driver beat and injects/heals exactly what the schedule says, so
+the same ``(seed, FabricConfig, schedule)`` replays the identical fault
+timeline — the PR 8 byte-identical discipline extended to faults.
+
+The nemesis is the *outside world*: it holds direct references to the
+server objects captured at construction, so it can crash, heal, or slow a
+server regardless of whether the membership controller currently has it
+registered. Everything it does is reported through ``coordinator.notify``
+(``nemesis.inject`` / ``nemesis.heal``) so the postmortem shows the fault
+next to the recovery it caused.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+
+from .coordinator import ClusterCoordinator
+
+KINDS = ("kill", "slow", "partition")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault.
+
+    ``stop_beat=None`` means the schedule never heals it (a permanent
+    fault). ``factor`` applies to ``slow`` (bandwidth divisor);
+    ``after_batches`` applies to ``kill`` (die only after shipping that
+    many more batches — a mid-lease death, the case lease migration must
+    survive; ``0`` dies immediately).
+    """
+
+    kind: str
+    server_id: str
+    start_beat: int
+    stop_beat: int | None = None
+    factor: float = 4.0
+    after_batches: int = 0
+
+    def __post_init__(self) -> None:
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.stop_beat is not None and self.stop_beat <= self.start_beat:
+            raise ValueError("stop_beat must follow start_beat")
+
+
+class Nemesis:
+    """Inject/heal the scheduled faults, track the active set."""
+
+    def __init__(self, coordinator: ClusterCoordinator,
+                 schedule: list[FaultSpec] | tuple[FaultSpec, ...],
+                 admission=None) -> None:
+        self.coordinator = coordinator
+        self.schedule = tuple(schedule)
+        self.admission = admission
+        # the outside world's view of the fleet: survives evictions
+        self._servers = dict(coordinator.servers)
+        self._saved_fabric: dict[str, object] = {}
+        self.active: dict[tuple[str, str], FaultSpec] = {}
+        # (beat, action, kind, server_id) — the determinism witness
+        self.timeline: list[tuple[int, str, str, str]] = []
+
+    def beat(self, beat: int, now_s: float) -> list[FaultSpec]:
+        """Apply the schedule for one beat; returns the specs acted on."""
+        acted: list[FaultSpec] = []
+        for spec in self.schedule:
+            if spec.stop_beat is not None and spec.stop_beat == beat:
+                self._heal(spec, beat, now_s)
+                acted.append(spec)
+        for spec in self.schedule:
+            if spec.start_beat == beat:
+                self._inject(spec, beat, now_s)
+                acted.append(spec)
+        return acted
+
+    # ------------------------------------------------------------- inject
+    def _inject(self, spec: FaultSpec, beat: int, now_s: float) -> None:
+        server = self._servers[spec.server_id]
+        if spec.kind == "kill":
+            server.crash(after_batches=spec.after_batches)
+        elif spec.kind == "slow":
+            fabric = server.fabric
+            if spec.server_id not in self._saved_fabric:
+                self._saved_fabric[spec.server_id] = fabric.config
+            base = self._saved_fabric[spec.server_id]
+            fabric.config = dataclasses.replace(
+                base, rdma_bw=base.rdma_bw / spec.factor,
+                rpc_bw=base.rpc_bw / spec.factor)
+        else:  # partition
+            if (self.admission is not None
+                    and spec.server_id in getattr(self.admission,
+                                                  "shards", {})):
+                self.admission.partition(spec.server_id)
+        self.active[(spec.kind, spec.server_id)] = spec
+        self.timeline.append((beat, "inject", spec.kind, spec.server_id))
+        self.coordinator.notify("nemesis.inject", server_id=spec.server_id,
+                                now_s=now_s, fault=spec.kind,
+                                stop_beat=spec.stop_beat)
+
+    # --------------------------------------------------------------- heal
+    def _heal(self, spec: FaultSpec, beat: int, now_s: float) -> None:
+        key = (spec.kind, spec.server_id)
+        if key not in self.active:
+            return
+        server = self._servers[spec.server_id]
+        if spec.kind == "kill":
+            server.restore()
+        elif spec.kind == "slow":
+            saved = self._saved_fabric.pop(spec.server_id, None)
+            if saved is not None:
+                server.fabric.config = saved
+        else:  # partition
+            if self.admission is not None:
+                rejoin = getattr(self.admission, "rejoin", None)
+                if rejoin is not None:
+                    rejoin(spec.server_id)
+        del self.active[key]
+        self.timeline.append((beat, "heal", spec.kind, spec.server_id))
+        self.coordinator.notify("nemesis.heal", server_id=spec.server_id,
+                                now_s=now_s, fault=spec.kind)
+
+
+def seeded_schedule(seed: int, server_ids: list[str] | tuple[str, ...],
+                    beats: int, faults: int = 3,
+                    kinds: tuple[str, ...] = KINDS,
+                    min_duration: int = 2,
+                    max_duration: int = 4) -> tuple[FaultSpec, ...]:
+    """A deterministic random schedule: ``faults`` specs drawn from
+    ``seed``, each targeting one server for a bounded window inside
+    ``[1, beats)``. Same arguments → same schedule, always."""
+    rng = random.Random(seed)
+    ids = sorted(server_ids)
+    specs = []
+    for _ in range(faults):
+        kind = rng.choice(list(kinds))
+        sid = rng.choice(ids)
+        duration = rng.randint(min_duration, max_duration)
+        start = rng.randint(1, max(1, beats - duration - 1))
+        specs.append(FaultSpec(kind, sid, start, stop_beat=start + duration))
+    return tuple(specs)

@@ -28,13 +28,22 @@ from ..core.protocol import ThallusServer
 @dataclasses.dataclass(frozen=True)
 class Endpoint:
     """One stream of the partitioned scan — exactly the arguments a client
-    needs to drive ``init_scan``/``iterate`` against one server."""
+    needs to drive ``init_scan``/``iterate`` against one server.
+
+    ``global_batches`` carries the *dataset-global* batch indices this
+    stream's shard holds, in shard-local order. A fresh round-robin deal
+    leaves it ``None`` (the classic ``i::n`` interleave reassembly applies);
+    after a membership change re-deals orphaned batches, shards hold
+    irregular index sets and reassembly must order by these global indices
+    instead.
+    """
 
     server_id: str
     sql: str
     dataset: str
     start_batch: int = 0
     max_batches: int | None = None   # None == drain to end-of-stream
+    global_batches: tuple[int, ...] | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,24 +92,41 @@ def probe_batches(server: ThallusServer, sql: str, dataset: str) -> int:
 def plan_scan(sql: str, dataset: str,
               servers: dict[str, ThallusServer],
               placement: str = "shard",
-              num_streams: int | None = None) -> ScanPlan:
+              num_streams: int | None = None,
+              assignment: dict[str, tuple[int, ...]] | None = None) -> ScanPlan:
     """Deterministic partitioned-scan plan.
 
     ``servers`` maps server_id → server for every server hosting ``dataset``
     (the coordinator's placement lookup). Endpoints are emitted in sorted
     server_id order so the same inputs always produce the same plan.
+
+    ``assignment`` (shard placement only) maps server_id → the dataset-global
+    batch indices its shard holds. Servers whose shard is empty — the common
+    case right after a member joins a small dataset, or when there are more
+    servers than batches — get no endpoint: an empty shard owns no rows, so
+    skipping it cannot drop data, and a stream pinned to it would only burn
+    an admission slot to deliver nothing.
     """
     if not servers:
         raise ValueError(f"no servers host dataset {dataset!r}")
     ids = tuple(sorted(servers))
     if placement == "shard":
+        if assignment is not None:
+            ids = tuple(sid for sid in ids if assignment.get(sid))
+            if not ids:
+                raise ValueError(
+                    f"every shard of dataset {dataset!r} is empty")
         if num_streams is not None and num_streams < len(ids):
-            # every shard-holding server owns rows nobody else has; fewer
-            # streams than shards would silently drop data
+            # every (non-empty) shard-holding server owns rows nobody else
+            # has; fewer streams than shards would silently drop data
             raise ValueError(
                 f"shard placement needs one stream per shard: {dataset!r} "
                 f"lives on {len(ids)} servers, num_streams={num_streams}")
-        endpoints = tuple(Endpoint(sid, sql, dataset) for sid in ids)
+        endpoints = tuple(
+            Endpoint(sid, sql, dataset,
+                     global_batches=(tuple(assignment[sid])
+                                     if assignment is not None else None))
+            for sid in ids)
     elif placement == "replica":
         streams = num_streams or len(ids)
         total = probe_batches(servers[ids[0]], sql, dataset)

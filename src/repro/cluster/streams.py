@@ -69,6 +69,7 @@ class StreamStats:
     rdma_ops: int = 0
     control_rpcs: int = 0
     resumes: int = 0
+    migrations: int = 0             # leases failed over to another replica
     alloc_s: float = 0.0            # measured: pool checkout or fresh alloc
     deserialize_s: float = 0.0      # measured: zero-copy assembly
     modeled_wire_s: float = 0.0
@@ -185,6 +186,11 @@ class ClusterStats:
         return sum(s.resumes for s in self.streams)
 
     @property
+    def migrations(self) -> int:
+        """Leases that failed over to a surviving replica mid-scan."""
+        return sum(s.migrations for s in self.streams)
+
+    @property
     def sum_total_s(self) -> float:
         """Total transport work across streams (serial equivalent)."""
         return sum(s.clock_s for s in self.streams)
@@ -216,7 +222,6 @@ class StreamPuller:
                  trace=None):
         self.coordinator = coordinator
         self.endpoint = endpoint
-        self.server = coordinator.server(endpoint.server_id)
         self.pool = pool
         self.max_resumes = max_resumes
         self.prefetch = prefetch
@@ -227,8 +232,24 @@ class StreamPuller:
         self.drained = False
         self.parked = False
         self._prefetch_budget_s = 0.0   # prior pull's wire time still hideable
-        self._handle = coordinator.open_stream(endpoint, client_id=client_id,
-                                               trace=trace, now_s=0.0)
+        try:
+            self.server = coordinator.server(endpoint.server_id)
+            self._handle = coordinator.open_stream(endpoint,
+                                                   client_id=client_id,
+                                                   trace=trace, now_s=0.0)
+        except (KeyError, ConnectionError):
+            # the plan named a server that left/crashed between planning and
+            # open — migrate the stream before it ever starts. No admission
+            # slot is held yet (open_stream released on failure), and
+            # qos.Backpressure is not a connection fault, so it propagates.
+            failover = getattr(coordinator, "failover_stream", None)
+            if failover is None:
+                raise
+            self.endpoint, self._handle = failover(endpoint, 0, client_id,
+                                                   slot_held=False)
+            self.server = coordinator.server(self.endpoint.server_id)
+            self.stats.server_id = self.endpoint.server_id
+            self.stats.migrations += 1
         self._lease_out: list[tuple[RecordBatch, bulk_mod.BulkHandle | None]] = []
 
     # ----------------------------------------------------------- remaining
@@ -398,13 +419,30 @@ class StreamPuller:
                 # resume just this stream where it died: batches that landed
                 # before the fault stay delivered, the lease pulls the rest
                 self.stats.resumes += 1
+                delivered = self.delivered + len(self._lease_out)
                 notify_coordinator(
                     self.coordinator, "stream.fault",
                     server_id=self.endpoint.server_id,
                     now_s=self.stats.clock_s,
-                    delivered=self.delivered + len(self._lease_out))
-                self._handle = self.coordinator.resume_stream(
-                    self.endpoint, self.delivered + len(self._lease_out))
+                    delivered=delivered)
+                failover = getattr(self.coordinator, "failover_stream", None)
+                if failover is None:
+                    self._handle = self.coordinator.resume_stream(
+                        self.endpoint, delivered)
+                    continue
+                # same-server resume when the server is alive; otherwise the
+                # lease fails over to a surviving replica mid-flight — the
+                # delivered prefix stays delivered, only the tail re-targets
+                old_sid = self.endpoint.server_id
+                self.endpoint, self._handle = failover(
+                    self.endpoint, delivered, self.client_id,
+                    now_s=self.stats.clock_s)
+                if self.endpoint.server_id != old_sid:
+                    self.server = self.coordinator.server(
+                        self.endpoint.server_id)
+                    self.stats.server_id = self.endpoint.server_id
+                    self.stats.migrations += 1
+                    self._prefetch_budget_s = 0.0  # cold pipe on new server
         self.delivered += len(self._lease_out)
         if not self._lease_out:
             self._finish()

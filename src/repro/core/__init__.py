@@ -17,6 +17,6 @@ from .transport import (  # noqa: F401
     rdma_pull_batch,
 )
 from .protocol import (  # noqa: F401
-    QueryEngine, RecordBatchReader, RpcClient, ScanHandle, ThallusClient,
-    ThallusServer,
+    QueryEngine, RecordBatchReader, RpcClient, ScanHandle, ServerCrashedError,
+    ThallusClient, ThallusServer,
 )

@@ -41,6 +41,13 @@ from .schema import Schema
 from .transport import TransportStats
 
 
+class ServerCrashedError(ConnectionError):
+    """The server process died mid-conversation — every in-flight lease on
+    it is gone and the client must fail over to a replica (or give up).
+    Subclasses ``ConnectionError`` so generic fault-handling loops that
+    already catch connection trouble treat a crash the same way."""
+
+
 class RecordBatchReader(Protocol):
     """Streaming access to result batches (Arrow's reader interface)."""
 
@@ -61,12 +68,12 @@ class _ReaderEntry:
     reader: RecordBatchReader
     schema: Schema
     batches_sent: int = 0
-    created_at: float = dataclasses.field(default_factory=time.monotonic)
-    last_activity: float = dataclasses.field(default_factory=time.monotonic)
+    created_at: float = 0.0
+    last_activity: float = 0.0
     finalized: bool = False
 
-    def touch(self) -> None:
-        self.last_activity = time.monotonic()
+    def touch(self, now: float) -> None:
+        self.last_activity = now
 
 
 @dataclasses.dataclass
@@ -78,18 +85,66 @@ class ScanHandle:
 
 
 class ThallusServer:
-    """Server half: owns the engine and the reader map."""
+    """Server half: owns the engine and the reader map.
 
-    def __init__(self, engine: QueryEngine, fabric: Fabric | None = None):
+    ``clock`` is the lease-staleness timebase: a zero-arg callable returning
+    seconds. Plain deployments leave it ``None`` and get ``time.monotonic``
+    (wall clock); modeled-time stacks (QoS/sched/obs layers) plumb their
+    modeled timeline in so :meth:`reclaim_stale` judges staleness on the
+    same clock everything else runs on.
+    """
+
+    def __init__(self, engine: QueryEngine, fabric: Fabric | None = None,
+                 clock: Callable[[], float] | None = None):
         self.engine = engine
         self.fabric = fabric or Fabric()
+        self.clock = clock
         self.reader_map: dict[str, _ReaderEntry] = {}
+        self._crashed = False
+        self._crash_after: int | None = None
+
+    def _now(self) -> float:
+        return self.clock() if self.clock is not None else time.monotonic()
+
+    # ----------------------------------------------------- crash semantics
+    @property
+    def crashed(self) -> bool:
+        return self._crashed
+
+    def crash(self, after_batches: int = 0) -> None:
+        """Kill the server process (nemesis hook).
+
+        ``after_batches=0`` dies immediately; ``after_batches=n`` dies after
+        shipping ``n`` more batches across all leases — mid-``iterate``, the
+        realistic failure a lease-migration path must survive. Either way
+        the reader map is wiped: leases do not survive a process death."""
+        if after_batches <= 0:
+            self._die()
+        else:
+            self._crash_after = after_batches
+
+    def restore(self) -> None:
+        """Bring the process back up (empty reader map — leases are gone)."""
+        self._crashed = False
+        self._crash_after = None
+
+    def _die(self) -> None:
+        self._crashed = True
+        self._crash_after = None
+        self.reader_map.clear()
+
+    def _check_alive(self) -> None:
+        if self._crashed:
+            raise ServerCrashedError("server is down")
 
     # ------------------------------------------------------------ init_scan
     def init_scan(self, sql: str, dataset: str, start_batch: int = 0) -> ScanHandle:
+        self._check_alive()
         reader = self.engine.execute(sql, dataset)
         uid = str(_uuid.uuid4())
-        entry = _ReaderEntry(reader=reader, schema=reader.schema)
+        now = self._now()
+        entry = _ReaderEntry(reader=reader, schema=reader.schema,
+                             created_at=now, last_activity=now)
         # resumability: fast-forward a restarted client
         for _ in range(start_batch):
             if reader.read_next() is None:
@@ -106,8 +161,9 @@ class ThallusServer:
                 max_batches: int | None = None) -> int:
         """Walk the reader; for each batch expose a read-only bulk and invoke
         the client's do_rdma. Returns number of batches shipped."""
+        self._check_alive()
         entry = self._entry(uid)
-        entry.touch()
+        entry.touch(self._now())
         shipped = 0
         while max_batches is None or shipped < max_batches:
             batch = entry.reader.read_next()
@@ -118,8 +174,15 @@ class ThallusServer:
             self.fabric.rpc(64 + 8 * sum(len(v) for v in sizes))  # control msg
             do_rdma(batch.num_rows, sizes, handle)
             entry.batches_sent += 1
-            entry.touch()
+            entry.touch(self._now())
             shipped += 1
+            if self._crash_after is not None:
+                self._crash_after -= 1
+                if self._crash_after <= 0:
+                    self._die()
+                    raise ServerCrashedError(
+                        f"server died mid-iterate after shipping {shipped} "
+                        "batch(es) of this lease")
         return shipped
 
     # ----------------------------------------------------------- next_batch
@@ -128,8 +191,9 @@ class ThallusServer:
         clients that ship data some other way, e.g. the RPC baseline). Keeps
         the reader-map bookkeeping — cursor position, lease activity — in one
         place instead of clients reaching into server internals."""
+        self._check_alive()
         entry = self._entry(uid)
-        entry.touch()
+        entry.touch(self._now())
         batch = entry.reader.read_next()
         if batch is not None:
             entry.batches_sent += 1
@@ -152,13 +216,20 @@ class ThallusServer:
         """For checkpointing the data pipeline: batches already sent."""
         return self._entry(uid).batches_sent
 
-    def reclaim_stale(self, older_than_s: float) -> int:
+    def reclaim_stale(self, older_than_s: float,
+                      now_s: float | None = None) -> int:
         """Evict leases whose client died without finalize (fault tolerance).
 
         Staleness is judged by ``last_activity`` — refreshed on every
         ``iterate``/``next_batch`` — not ``created_at``, so a long-running
-        but actively-pulling scan is never evicted out from under its client."""
-        now = time.monotonic()
+        but actively-pulling scan is never evicted out from under its client.
+
+        ``now_s`` overrides the sweep's notion of *now* for one call;
+        otherwise the server's ``clock`` (modeled timeline when plumbed,
+        wall clock by default) supplies it. Passing modeled time matters:
+        a whole modeled scan elapses in sub-ms of wall time, so a
+        wall-clock sweep can never reclaim a modeled dead lease."""
+        now = self._now() if now_s is None else now_s
         stale = [u for u, e in self.reader_map.items()
                  if now - e.last_activity > older_than_s]
         for u in stale:

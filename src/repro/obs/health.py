@@ -146,7 +146,9 @@ class HealthMonitor:
         if not server_id:
             return
         h = self._server(server_id)
-        if kind in ("stream.fault", "stream.resume"):
+        if kind in ("stream.fault", "stream.resume", "stream.migrate"):
+            # a migration is attributed to the server the lease *left* —
+            # the strongest per-window evidence that server is gone
             h.window_faults += 1
             h.faults += 1
         elif kind in ("stream.park", "scan.park"):

@@ -113,14 +113,17 @@ class FlightRecorder:
     # -- postmortems ------------------------------------------------------
 
     def postmortem(self, trigger=None, registry=None, health=None,
-                   tracer=None, last_n: int = 64) -> dict:
+                   tracer=None, membership=None, last_n: int = 64) -> dict:
         """Assemble the diagnosis bundle for one alert.
 
         ``trigger`` is whatever fired (an ``SloAlert``, a ``PerfEvent``, a
         plain dict/string); ``registry``/``health``/``tracer`` are the
         session's ``MetricsRegistry`` / ``HealthMonitor`` / ``Tracer`` if
         present — all duck-typed, all optional, so the recorder stays
-        importable anywhere.
+        importable anywhere. ``membership`` (a
+        ``cluster.MembershipController``) adds the currently-evicted set
+        and the evict/re-admit transition log, so a nemesis postmortem
+        shows *who was out* when the page fired.
         """
         bundle: dict = {
             "trigger": _as_plain(trigger),
@@ -139,13 +142,20 @@ class FlightRecorder:
                                                for t in transitions]
         if tracer is not None and hasattr(tracer, "to_chrome"):
             bundle["trace"] = tracer.to_chrome()
+        if membership is not None:
+            bundle["membership"] = {
+                "evicted": list(getattr(membership, "evicted", ()) or ()),
+                "events": [_as_plain(e)
+                           for e in getattr(membership, "events", [])],
+            }
         return bundle
 
     def dump(self, path: str, trigger=None, registry=None, health=None,
-             tracer=None, last_n: int = 64) -> str:
+             tracer=None, membership=None, last_n: int = 64) -> str:
         """Write :meth:`postmortem` as JSON; returns the path written."""
         bundle = self.postmortem(trigger=trigger, registry=registry,
-                                 health=health, tracer=tracer, last_n=last_n)
+                                 health=health, tracer=tracer,
+                                 membership=membership, last_n=last_n)
         parent = os.path.dirname(path)
         if parent:
             os.makedirs(parent, exist_ok=True)

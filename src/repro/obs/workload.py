@@ -242,6 +242,8 @@ class BeatReport:
     shed: int
     declined: int
     alerts: list = dataclasses.field(default_factory=list)
+    migrations: int = 0     # leases failed over to a replica this beat
+    membership: list = dataclasses.field(default_factory=list)
 
 
 class StressDriver:
@@ -265,13 +267,20 @@ class StressDriver:
     """
 
     def __init__(self, gateway, populations, *, seed: int = 0, slo=None,
-                 recorder=None,
+                 recorder=None, nemesis=None, membership=None,
                  inflation_pair: tuple[str, str] = ("interactive", "batch")):
         self.gateway = gateway
         self.populations = list(populations)
         self.loads = [PopulationSideWorkload(p, seed=seed)
                       for p in self.populations]
         self.slo = slo
+        # optional chaos loop (both duck-typed): the nemesis injects its
+        # scheduled faults at the top of each beat, the membership
+        # controller acts on health verdicts right after the heartbeat
+        self.nemesis = nemesis
+        self.membership = membership
+        self.migrations = 0      # cumulative stream.migrate events observed
+        self.beat_migrations = 0
         self.recorder = (recorder if recorder is not None else
                          getattr(getattr(gateway, "coordinator", None),
                                  "recorder", None))
@@ -299,9 +308,13 @@ class StressDriver:
     def beat(self) -> BeatReport:
         gw = self.gateway
         index = self.beats
+        if self.nemesis is not None:
+            self.nemesis.beat(index, gw.clock_s)
         self._squat(index)
         before = {p.name: self._class_counts(p.name)
                   for p in self.populations}
+        migrate_seq = (self.recorder.next_seq
+                       if self.recorder is not None else 0)
         submitted = []
         for load in self.loads:
             submitted.extend(load.submit(gw, now_s=gw.clock_s))
@@ -311,6 +324,15 @@ class StressDriver:
                             "heartbeat", None)
         if callable(heartbeat):
             heartbeat(now)
+        transitions = (self.membership.heartbeat(now)
+                       if self.membership is not None else [])
+        migrations = 0
+        if self.recorder is not None:
+            migrations = sum(
+                1 for ev in self.recorder.events(kinds=("stream.migrate",))
+                if ev.seq >= migrate_seq)
+            self.migrations += migrations
+        self.beat_migrations = migrations
         shed_d, decl_d = self._attribute_events()
         self.beat_stats = {}
         for p in self.populations:
@@ -337,7 +359,8 @@ class StressDriver:
             granted=sum(s["granted"] for s in self.beat_stats.values()),
             shed=sum(s["shed"] for s in self.beat_stats.values()),
             declined=sum(s["declines"] for s in self.beat_stats.values()),
-            alerts=fired)
+            alerts=fired, migrations=migrations,
+            membership=list(transitions))
         self.reports.append(report)
         self.beats += 1
         return report
@@ -470,6 +493,9 @@ def record_workload(reg: MetricsRegistry, driver,
         reg.gauge(f"{pp}.beat.shed", beat.get("shed", 0))
         reg.gauge(f"{pp}.beat.declines", beat.get("declines", 0))
         reg.gauge(f"{pp}.beat.p50_grant_us", beat.get("p50_grant_us", 0.0))
+    reg.counter(f"{prefix}.migrations", getattr(driver, "migrations", 0))
+    reg.gauge(f"{prefix}.beat.migrations",
+              float(getattr(driver, "beat_migrations", 0)))
     fair = driver.fairness()
     reg.gauge(f"{prefix}.fairness.jain", fair["jain"])
     reg.gauge(f"{prefix}.fairness.latency_inflation",

@@ -142,6 +142,33 @@ def _split(total: int, n: int) -> list[int]:
     return [base + (1 if i < rem else 0) for i in range(n)]
 
 
+def _water_fill(shards: list[AdmissionShard],
+                total: float) -> dict[str, float]:
+    """Level ``total`` lease tokens toward equal shares across ``shards``,
+    capped at each bucket's burst; any spill re-levels among buckets with
+    headroom (``total <= sum of bursts``, so it always fits). Returns
+    server_id → target token count. Shared by the reconciler's periodic
+    rebalance and the membership re-split."""
+    targets = {s.server_id: 0.0 for s in shards}
+    remaining = total
+    pool = list(shards)
+    while pool and remaining > 1e-12:
+        share = remaining / len(pool)
+        spill = [s for s in pool
+                 if float(s.config.lease_burst) - targets[s.server_id]
+                 <= share]
+        if not spill:
+            for s in pool:
+                targets[s.server_id] += share
+            break
+        for s in spill:
+            add = float(s.config.lease_burst) - targets[s.server_id]
+            targets[s.server_id] += add
+            remaining -= add
+            pool.remove(s)
+    return targets
+
+
 class ShardedAdmission:
     """Per-server admission shards under one global budget.
 
@@ -185,6 +212,10 @@ class ShardedAdmission:
                 lease_burst=bursts[i])
             self.shards[sid] = AdmissionShard(sid, local, pool=pool)
         self._partitioned: set[str] = set()
+        # evicted shards kept as tombstones so late releases from leases
+        # that were in flight when the server died settle against the dead
+        # ledger instead of mis-routing onto a live shard (see remove_shard)
+        self._retired: dict[str, AdmissionShard] = {}
         self._release_cbs: list = []
         self._last_reconcile_s = 0.0
         self._reconciles = 0
@@ -290,6 +321,16 @@ class ShardedAdmission:
     def release_stream(self, client_id: str = "default",
                        server_id: str | None = None,
                        now_s: float | None = None) -> None:
+        if server_id is not None and server_id in self._retired:
+            # the slot was held on a shard that has since been absorbed
+            # (server evicted); settle the dead ledger quietly — the
+            # capacity already moved to the survivors, so no live slot
+            # frees and no freed-slot callback fires
+            tomb = self._retired[server_id]
+            if tomb.active_streams(client_id) > 0:
+                tomb.release_stream(client_id, server_id=server_id,
+                                    now_s=now_s)
+            return
         shard = self._route_release(client_id, server_id)
         if shard is None or shard.active_streams(client_id) == 0:
             return       # nothing held: no decrement, no phantom event
@@ -425,6 +466,91 @@ class ShardedAdmission:
     def partitioned(self, server_id: str) -> bool:
         return server_id in self._partitioned
 
+    # ----------------------------------------------------------- membership
+    def remove_shard(self, server_id: str, now_s: float = 0.0) -> None:
+        """Absorb a dead/evicted server's quota shard into the survivors.
+
+        The shard's bucket is refilled to ``now_s`` and its tokens join the
+        re-split (conserved, never destroyed); the base budget is re-dealt
+        across the surviving shards so the cluster-wide quota is unchanged
+        by the membership change. The shard itself is kept as a tombstone:
+        leases that were in flight when the server died release against it
+        later without touching a live shard's ledger."""
+        shard = self.shard(server_id)
+        if len(self.shards) == 1:
+            raise ValueError("cannot remove the last admission shard")
+        shard._refill(now_s)
+        orphan_tokens = shard._tokens
+        shard._tokens = 0.0
+        del self.shards[server_id]
+        self._partitioned.discard(server_id)
+        self._retired[server_id] = shard
+        self._resplit(now_s, extra_tokens=orphan_tokens)
+        if self.recorder is not None:
+            self.recorder.record("admission.shard_absorbed", now_s=now_s,
+                                 server_id=server_id,
+                                 tokens_absorbed=orphan_tokens,
+                                 survivors=len(self.shards))
+
+    def add_shard(self, server_id: str, now_s: float = 0.0) -> None:
+        """Spawn a quota shard for a joining (or re-admitted) server by
+        re-splitting the base budget across the grown membership. A
+        re-admitted server starts with a clean ledger — its pre-eviction
+        leases died with the process (or migrated and settled against the
+        tombstone, which is dropped here)."""
+        if server_id in self.shards:
+            raise ValueError(f"shard {server_id!r} already exists")
+        self._retired.pop(server_id, None)
+        local = dataclasses.replace(self.config, lease_burst=0,
+                                    lease_rate_per_s=None)
+        self.shards[server_id] = AdmissionShard(server_id, local,
+                                                pool=self.pool)
+        self._resplit(now_s)
+        if self.recorder is not None:
+            self.recorder.record("admission.shard_spawned", now_s=now_s,
+                                 server_id=server_id,
+                                 members=len(self.shards))
+
+    def _resplit(self, now_s: float, extra_tokens: float = 0.0) -> None:
+        """Re-deal the base budget across the current shard set.
+
+        Every borrow adjustment is cleared (all-zero trivially satisfies
+        the zero-sum invariant) and each shard's config becomes its fresh
+        slice of the global budget; a shard holding more in-use streams
+        than its new slice simply denies new grants until it drains, so
+        the global caps are never exceeded. Tokens (current holdings plus
+        ``extra_tokens`` from an absorbed shard) are re-leveled by the
+        same water-fill the reconciler uses — conserved by construction."""
+        ids = sorted(self.shards)
+        n = len(ids)
+        quotas = (_split(self.config.max_streams_per_client, n)
+                  if self.config.max_streams_per_client is not None
+                  else [None] * n)
+        caps = (_split(self.config.max_streams_total, n)
+                if self.config.max_streams_total is not None
+                else [None] * n)
+        bursts = _split(self.config.lease_burst, n)
+        rate = self.config.lease_rate_per_s
+        shards = [self.shards[sid] for sid in ids]
+        for shard in shards:
+            shard._refill(now_s)
+        total_tokens = sum(s._tokens for s in shards) + extra_tokens
+        for i, (sid, shard) in enumerate(zip(ids, shards)):
+            shard.config = dataclasses.replace(
+                shard.config, max_streams_per_client=quotas[i],
+                max_streams_total=caps[i],
+                lease_rate_per_s=None if rate is None else rate / n,
+                lease_burst=bursts[i])
+            shard._client_adjust.clear()
+            shard._total_adjust = 0
+            # a joiner's bucket clock starts at the re-split (its placeholder
+            # config had no rate, so _refill above didn't advance it)
+            shard._bucket_clock_s = max(shard._bucket_clock_s, now_s)
+        targets = _water_fill(shards, total_tokens)
+        for shard in shards:
+            shard._tokens = min(targets[shard.server_id],
+                                float(shard.config.lease_burst))
+
     def reconcile(self, now_s: float) -> ReconcileReport:
         """One rebalance round over the non-partitioned shards.
 
@@ -513,27 +639,7 @@ class ShardedAdmission:
             shard._refill(now_s)
         total = sum(s._tokens for s in shards)
         report.tokens_before = total
-        # water-fill toward equal shares, capped at each bucket's burst;
-        # any spill re-levels among buckets with headroom (total <= sum of
-        # bursts, so it always fits)
-        targets = {s.server_id: 0.0 for s in shards}
-        remaining = total
-        pool = list(shards)
-        while pool and remaining > 1e-12:
-            share = remaining / len(pool)
-            spill = [s for s in pool
-                     if float(s.config.lease_burst) - targets[s.server_id]
-                     <= share]
-            if not spill:
-                for s in pool:
-                    targets[s.server_id] += share
-                remaining = 0.0
-                break
-            for s in spill:
-                add = float(s.config.lease_burst) - targets[s.server_id]
-                targets[s.server_id] += add
-                remaining -= add
-                pool.remove(s)
+        targets = _water_fill(shards, total)
         for shard in shards:
             delta = targets[shard.server_id] - shard._tokens
             if delta > 1e-12:

@@ -108,13 +108,22 @@ def reassemble(plan: ScanPlan, per_stream: list[list[RecordBatch]],
       grown past ``plan.endpoints``).
     * ``shard`` plans come from :meth:`ClusterCoordinator.place_shards`,
       which deals ``batches[i::n]`` to the i-th sorted server, so stream
-      *i*'s j-th batch is global batch ``j*n + i`` — re-interleave.
+      *i*'s j-th batch is global batch ``j*n + i`` — re-interleave. After
+      a membership change re-deals orphaned batches, shards are irregular
+      and the interleave assumption breaks; such plans carry each shard's
+      dataset-global indices on ``Endpoint.global_batches``, and the merge
+      orders by those instead.
     """
     endpoints = plan.endpoints if endpoints is None else endpoints
     if plan.placement == "replica":
         order = sorted(range(len(endpoints)),
                        key=lambda i: endpoints[i].start_batch)
         return [b for i in order for b in per_stream[i]]
+    if endpoints and all(e.global_batches is not None for e in endpoints):
+        tagged = [(g, b)
+                  for ep, stream in zip(endpoints, per_stream)
+                  for g, b in zip(ep.global_batches, stream)]
+        return [b for _, b in sorted(tagged, key=lambda t: t[0])]
     out: list[RecordBatch] = []
     j = 0
     while True:

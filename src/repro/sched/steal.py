@@ -440,12 +440,23 @@ class StealingPuller(MultiStreamPuller):
 
     def _idle_servers(self) -> dict[str, float]:
         """server_id → idle-since epoch for replicas with no live stream of
-        this scan. A server never leased by this scan is idle from t=0."""
+        this scan. A server never leased by this scan is idle from t=0.
+        A crashed process or a health-quarantined server is never idle in
+        the thieving sense — re-leasing a tail onto it would just fault the
+        tail back off (both checks duck-typed: plain deployments with
+        neither crash hooks nor a monitor steal exactly as before)."""
         hosts = self.coordinator.hosts(self.plan.dataset)
         busy = {p.endpoint.server_id for p in self.pullers if not p.drained}
+        monitor = getattr(self.coordinator, "health", None)
+        state = getattr(monitor, "state", None) if monitor is not None \
+            else None
         idle: dict[str, float] = {}
-        for sid in hosts:
+        for sid, server in hosts.items():
             if sid in busy:
+                continue
+            if getattr(server, "crashed", False):
+                continue
+            if state is not None and state(sid) == "quarantined":
                 continue
             drained = [p for p in self.pullers
                        if p.endpoint.server_id == sid and p.drained]

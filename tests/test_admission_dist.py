@@ -492,3 +492,78 @@ def test_replan_events_before_grant_are_not_double_counted():
     gateway.run()
     assert gateway.stats.replans == 0
     assert gateway.result(req.request_id) is not None
+
+
+# ------------------------------------------- elastic shard add/remove
+
+
+def test_remove_shard_absorbs_capacity_and_tombstones_releases():
+    """Evicting a quota shard re-splits the global cap across survivors and
+    leaves a tombstone: a late release from an in-flight lease that was
+    admitted on the dead shard settles against the tombstone instead of
+    mis-crediting a survivor (the over-admission hazard)."""
+    cfg = AdmissionConfig(max_streams_total=6)
+    sharded = ShardedAdmission(cfg, ["s0", "s1", "s2"])
+    sharded.acquire_stream("c", server_id="s2")      # in-flight on s2
+    sharded.remove_shard("s2", now_s=1.0)
+    assert sorted(sharded.shards) == ["s0", "s1"]
+    assert sum(s.config.max_streams_total
+               for s in sharded.shards.values()) == 6
+    before = {sid: s.active_total() for sid, s in sharded.shards.items()}
+    sharded.release_stream("c", server_id="s2")      # settles on the tombstone
+    assert {sid: s.active_total()
+            for sid, s in sharded.shards.items()} == before
+    # the freed global headroom is real: survivors admit the full cap
+    for i in range(6):
+        sharded.acquire_stream(f"c{i}", server_id=["s0", "s1"][i % 2])
+    with pytest.raises(Backpressure):
+        sharded.acquire_stream("late", server_id="s0")
+
+
+def test_remove_last_shard_refused():
+    sharded = ShardedAdmission(AdmissionConfig(max_streams_total=4),
+                               ["s0", "s1"])
+    sharded.remove_shard("s0")
+    with pytest.raises(ValueError, match="last"):
+        sharded.remove_shard("s1")
+    with pytest.raises(KeyError):
+        sharded.remove_shard("s9")
+
+
+def test_add_shard_resplits_and_conserves_tokens(modeled_clock):
+    """A joiner gets a fresh quota shard carved out of the SAME global
+    budget (caps re-split, not inflated) and the token pool is conserved
+    through the leave/join cycle — the joiner's bucket clock starts at the
+    join, so it cannot over-credit a backlog of phantom refill time."""
+    cfg = AdmissionConfig(max_streams_total=6, lease_rate_per_s=100.0,
+                          lease_burst=8)
+    sharded = ShardedAdmission(
+        cfg, ["s0", "s1"],
+        dist=DistributedConfig(reconcile_interval_s=1e9))
+    now = modeled_clock.now_s
+    total_before = sum(s.tokens_at(now) for s in sharded.shards.values())
+    sharded.remove_shard("s1", now_s=now)
+    assert sum(s.tokens_at(now)
+               for s in sharded.shards.values()) == pytest.approx(
+                   min(total_before, 8.0))          # capped at s0's burst
+    modeled_clock.advance(1.0)
+    now = modeled_clock.now_s
+    sharded.add_shard("s1", now_s=now)
+    assert sorted(sharded.shards) == ["s0", "s1"]
+    assert sum(s.config.max_streams_total
+               for s in sharded.shards.values()) == 6
+    total = sum(s.tokens_at(now) for s in sharded.shards.values())
+    assert total <= 8.0 + 1e-9                      # never above the budget
+    # phantom-refill guard: a joiner polled much later refills only from
+    # its join time, never from t=0
+    modeled_clock.advance(1e-3)
+    s1 = sharded.shards["s1"]
+    assert s1.tokens_at(modeled_clock.now_s) <= \
+        float(s1.config.lease_burst) + 1e-9
+
+
+def test_readd_existing_shard_refused():
+    sharded = ShardedAdmission(AdmissionConfig(max_streams_total=4),
+                               ["s0", "s1"])
+    with pytest.raises(ValueError, match="already"):
+        sharded.add_shard("s1")

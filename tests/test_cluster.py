@@ -308,3 +308,59 @@ def test_loader_cluster_resume_roundtrip():
     assert len(first) + len(rest) == len(full)
     assert sum(int(c["tokens"].sum()) for c in first + rest) == \
            sum(int(c["tokens"].sum()) for c in full)
+
+
+# -------------------------------------------- stale placements + empty shards
+
+
+def test_hosts_drops_stale_placement_entries():
+    """Regression: a placement naming a server that left the cluster (any
+    path that bypassed remove_server's repair) raised KeyError out of
+    hosts() and stranded EVERY scan of the dataset. Stale entries are now
+    dropped — and reported as ``placement.stale`` — and plan() fails with
+    a typed PlacementError only when no host survives."""
+    from repro.cluster import PlacementError
+    from repro.obs import FlightRecorder
+
+    coord = make_cluster(3, placement="replica")
+    coord.recorder = FlightRecorder()
+    del coord.servers["s1"]                       # leave WITHOUT repair
+    hosts = coord.hosts("/d")
+    assert sorted(hosts) == ["s0", "s2"]
+    stale = coord.recorder.events(kinds=["placement.stale"])
+    assert [e.server_id for e in stale] == ["s1"]
+    plan = coord.plan(SQL, "/d", num_streams=2)   # survivors still plan
+    assert {e.server_id for e in plan.endpoints} <= {"s0", "s2"}
+    coord.servers.clear()
+    with pytest.raises(PlacementError):
+        coord.plan(SQL, "/d")
+
+
+def test_empty_shards_plan_and_scan_exactly_once():
+    """Regression: place_shards with more servers than batches leaves some
+    shards empty; planning then died (min-stream check counted empty
+    shards) or opened zero-batch streams. Empty shards are now filtered
+    out of the plan and the scan still delivers every row exactly once."""
+    table = make_numeric_table("t", 3 * 4096, 2, batch_rows=4096)  # 3 batches
+    coord = ClusterCoordinator()
+    for i in range(5):
+        coord.add_server(f"s{i}", ThallusServer(Engine(), Fabric()))
+    coord.place_shards("/d", table)
+    plan = coord.plan(SQL, "/d")
+    assert plan.num_streams == 3                  # only non-empty shards
+    got = []
+    cluster_scan(coord, SQL, "/d", sink=lambda i, b: got.append(b))
+    ref = reference_batches(SQL, table=table)
+    assert sorted(b.column("c0").values.tobytes() for b in got) == \
+        sorted(b.column("c0").values.tobytes() for b in ref)
+
+
+def test_all_shards_empty_raises_typed_error():
+    table = make_numeric_table("t", 4096, 2, batch_rows=4096)
+    coord = ClusterCoordinator()
+    for i in range(2):
+        coord.add_server(f"s{i}", ThallusServer(Engine(), Fabric()))
+    coord.place_shards("/d", table)
+    coord._placements["/d"].assignment = {"s0": (), "s1": ()}
+    with pytest.raises(ValueError, match="every shard"):
+        coord.plan(SQL, "/d")

@@ -1,0 +1,291 @@
+"""Elastic membership + nemesis fault injection: live join/leave/evict,
+in-flight lease migration, health-driven evict/re-admit, and the seeded
+fault schedule's determinism guarantees."""
+import numpy as np
+import pytest
+from conftest import make_coordinator, reference_batches
+
+from repro.cluster import (ClusterCoordinator, FaultSpec, MembershipController,
+                           MigrationError, Nemesis, cluster_scan,
+                           seeded_schedule)
+from repro.core import Fabric, FabricConfig, ServerCrashedError, ThallusServer
+from repro.engine import Engine, make_numeric_table
+from repro.obs import FlightRecorder, HealthMonitor
+from repro.qos import ClientClass, ScanGateway, ScanRequest
+
+ROWS = 40_000
+SQL = "SELECT c0, c1 FROM t"
+
+
+def scan_signature(coord, sql=SQL, dataset="/d", **kw):
+    """Byte signature of a full cluster scan, in arrival order — compare as
+    a multiset (``sorted``): the exactly-once witness."""
+    got = []
+    cluster_scan(coord, sql, dataset,
+                 sink=lambda i, b: got.append(b), **kw)
+    return [tuple(c.values.tobytes() for c in b.columns) for b in got]
+
+
+def ordered_signature(coord, sql=SQL, num_streams=None):
+    """Byte signature through the gateway's reassembly — global dataset
+    order, the stronger byte-identical-delivery witness."""
+    gw = ScanGateway(coord, classes=[ClientClass("c", 1.0)])
+    gw.submit(ScanRequest("t", "c", sql, "/d", num_streams=num_streams))
+    (result,) = gw.run()
+    return [tuple(c.values.tobytes() for c in b.columns)
+            for b in result.batches]
+
+
+def reference_signature(sql=SQL, rows=ROWS):
+    return [tuple(c.values.tobytes() for c in b.columns)
+            for b in reference_batches(sql, rows=rows)]
+
+
+# ------------------------------------------------ live leave/join re-placement
+
+
+def test_remove_server_redeals_shards_exactly_once():
+    """A shard server leaving re-deals ONLY its orphaned batches: survivors
+    keep everything they held (minimal movement), and a scan after the
+    repair still delivers every row exactly once."""
+    coord = make_coordinator(4)
+    before = dict(coord._placements["/d"].assignment)
+    orphans = set(before["s1"])
+    coord.remove_server("s1")
+    after = coord._placements["/d"].assignment
+    assert "s1" not in after
+    for sid in ("s0", "s2", "s3"):
+        assert set(before[sid]) <= set(after[sid])   # survivors keep theirs
+    moved = set().union(*(set(after[s]) - set(before[s])
+                          for s in ("s0", "s2", "s3")))
+    assert moved == orphans                          # only orphans moved
+    assert sorted(scan_signature(coord)) == sorted(reference_signature())
+
+
+def test_add_server_rebalance_minimal_movement():
+    """A live join takes ⌊batches/n⌋ slices from the largest shards — and
+    the re-placed cluster still scans exactly-once."""
+    coord = make_coordinator(3)
+    before = dict(coord._placements["/d"].assignment)
+    total = sum(len(v) for v in before.values())
+    coord.add_server("s3", ThallusServer(Engine(), Fabric()),
+                     rebalance=True)
+    after = coord._placements["/d"].assignment
+    assert len(after["s3"]) == total // 4
+    for sid in ("s0", "s1", "s2"):                   # donors keep a prefix
+        assert set(after[sid]) <= set(before[sid])
+    assert sorted(scan_signature(coord)) == sorted(reference_signature())
+
+
+def test_scan_parity_after_irregular_redeal():
+    """After a leave the shards are no longer a regular ``i::n`` deal; the
+    reassembled result must still come back in dataset order (the
+    ``global_batches``-sorted path, not the legacy interleave)."""
+    coord = make_coordinator(4)
+    coord.remove_server("s2")
+    assert ordered_signature(coord) == reference_signature()
+
+
+# ------------------------------------------------- in-flight lease migration
+
+
+def test_midlease_failover_is_byte_identical():
+    """A replica dies MID-LEASE (after shipping one more batch); the lease
+    migrates to a surviving replica via init_scan(start_batch=delivered)
+    and the scan's total delivery is byte-identical — no loss, no re-ship."""
+    recorder = FlightRecorder()
+    coord = make_coordinator(3, placement="replica")
+    coord.recorder = recorder
+    coord.server("s0").crash(after_batches=1)
+    assert ordered_signature(coord, num_streams=3) == reference_signature()
+    migrates = recorder.events(kinds=["stream.migrate"])
+    assert migrates and migrates[0].server_id == "s0"
+    assert migrates[0].attrs["delivered"] >= 1       # the shipped prefix
+
+
+def test_open_time_failover_when_server_already_dead():
+    """A stream planned onto an already-crashed replica opens directly on
+    the failover target instead of failing the whole scan."""
+    coord = make_coordinator(3, placement="replica")
+    coord.server("s1").crash()
+    assert ordered_signature(coord, num_streams=3) == reference_signature()
+
+
+def test_failover_needs_a_replica_home():
+    """Shard placements cannot fail over — disjoint rows have no second
+    home — and a replica scan with NO survivor raises MigrationError."""
+    coord = make_coordinator(2)
+    plan = coord.plan(SQL, "/d")
+    with pytest.raises(MigrationError):
+        coord.failover_target(plan.endpoints[0])
+    coord = make_coordinator(2, placement="replica")
+    plan = coord.plan(SQL, "/d", num_streams=2)
+    for sid in ("s0", "s1"):
+        coord.server(sid).crash()
+    with pytest.raises(MigrationError):
+        coord.failover_target(plan.endpoints[0])
+
+
+def test_failover_target_prefers_healthy_replicas():
+    recorder = FlightRecorder()
+    health = HealthMonitor(recorder=recorder)
+    coord = make_coordinator(3, placement="replica")
+    coord.recorder, coord.health = recorder, health
+    plan = coord.plan(SQL, "/d", num_streams=3)
+    coord.server("s0").crash()
+    # s1 collects a fault storm -> worst-ranked among the candidates
+    for _ in range(3):
+        coord.notify("stream.fault", server_id="s1", now_s=1.0)
+    coord.heartbeat(1.0)
+    assert coord.failover_target(plan.endpoints[0]) == "s2"
+
+
+# ----------------------------------------------- health-driven evict/re-admit
+
+
+def make_monitored_cluster():
+    recorder = FlightRecorder()
+    health = HealthMonitor(recorder=recorder)
+    coord = make_coordinator(3, placement="replica")
+    coord.recorder, coord.health = recorder, health
+    return coord, health, recorder
+
+
+def test_membership_evicts_quarantined_and_readmits_recovered():
+    coord, health, recorder = make_monitored_cluster()
+    controller = MembershipController(coord, health)
+    coord.server("s0").crash()
+    for _ in range(3):                               # the fault storm
+        coord.notify("stream.fault", server_id="s0", now_s=1.0)
+    coord.heartbeat(1.0)
+    fired = controller.heartbeat(1.0)
+    assert [e.action for e in fired] == ["evict"]
+    assert controller.evicted == ("s0",)
+    assert "s0" not in coord.servers
+    assert "s0" not in coord._placements["/d"].server_ids
+    assert any(e.kind == "membership.evict" for e in recorder.events())
+
+    # still crashed: hysteretic recovery alone must NOT re-admit
+    now = 2.0
+    for _ in range(16):
+        if health.state("s0") == "degraded":
+            break
+        coord.heartbeat(now)
+        assert not controller.heartbeat(now)
+        now += 1.0
+    assert health.state("s0") == "degraded", "recovery never stepped down"
+    controller._evicted["s0"].restore()
+    fired = controller.heartbeat(now)
+    assert [e.action for e in fired] == ["readmit"]
+    assert controller.evicted == ()
+    assert "s0" in coord.servers
+    assert "s0" in coord._placements["/d"].server_ids
+    # the re-admitted replica serves again, byte-identical
+    assert sorted(scan_signature(coord, num_streams=3)) == \
+        sorted(reference_signature())
+
+
+def test_readmitted_server_gets_replica_copy_registered():
+    """Re-admission repairs the placement: the joiner's engine holds the
+    dataset again even though eviction preceded any explicit register."""
+    coord, health, _ = make_monitored_cluster()
+    controller = MembershipController(coord, health)
+    server = coord.server("s1")
+    server.crash()
+    for _ in range(3):
+        coord.notify("stream.fault", server_id="s1", now_s=1.0)
+    coord.heartbeat(1.0)
+    controller.heartbeat(1.0)
+    server.engine = Engine()                         # simulate a cold restart
+    server.restore()
+    now = 2.0
+    for _ in range(16):
+        if "s1" in coord.servers:
+            break
+        coord.heartbeat(now)
+        controller.heartbeat(now)
+        now += 1.0
+    assert "s1" in coord.servers, "recovered server never re-admitted"
+    assert "/d" in server.engine.catalog
+
+
+# ----------------------------------------------------- nemesis determinism
+
+
+def _nemesis_run(seed: int):
+    """One fully-seeded chaos loop; returns its observable fingerprint."""
+    recorder = FlightRecorder(capacity=1024)
+    health = HealthMonitor(recorder=recorder)
+    table = make_numeric_table("t", ROWS, 4, batch_rows=4096)
+    coord = ClusterCoordinator(recorder=recorder, health=health)
+    for i in range(4):
+        coord.add_server(f"s{i}",
+                         ThallusServer(Engine(), Fabric(FabricConfig())))
+    coord.place_replicas("/d", table)
+    schedule = seeded_schedule(seed, list(coord.servers), beats=10)
+    nemesis = Nemesis(coord, schedule)
+    controller = MembershipController(coord, health)
+    delivered = []
+    for beat in range(10):
+        now = float(beat)
+        nemesis.beat(beat, now)
+        delivered.extend(scan_signature(coord, num_streams=2))
+        coord.heartbeat(now)
+        controller.heartbeat(now)
+    return (tuple(nemesis.timeline), delivered, recorder.counts(),
+            tuple(e.action for e in controller.events))
+
+
+def test_nemesis_replays_identically():
+    """Same (seed, FabricConfig, schedule) → identical fault timeline,
+    delivered bytes, flight-recorder event counts and membership log."""
+    assert _nemesis_run(3) == _nemesis_run(3)
+
+
+def test_nemesis_delivery_survives_the_schedule():
+    """Whatever the seeded schedule does, every beat's scan still delivers
+    the full dataset byte-identically (exactly-once under chaos)."""
+    timeline, delivered, counts, _ = _nemesis_run(3)
+    assert timeline                                  # the schedule acted
+    ref = sorted(reference_signature(sql=SQL))
+    per_scan = len(ref)
+    assert len(delivered) == 10 * per_scan
+    for i in range(10):
+        assert sorted(delivered[i * per_scan:(i + 1) * per_scan]) == ref
+    assert counts.get("nemesis.inject", 0) >= 1
+
+
+def test_seeded_schedule_is_pure():
+    a = seeded_schedule(7, ["s0", "s1", "s2"], beats=12)
+    assert a == seeded_schedule(7, ["s0", "s1", "s2"], beats=12)
+    assert a != seeded_schedule(8, ["s0", "s1", "s2"], beats=12)
+    for spec in a:
+        assert 1 <= spec.start_beat < spec.stop_beat <= 12
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("meteor", "s0", 1)
+    with pytest.raises(ValueError, match="stop_beat"):
+        FaultSpec("kill", "s0", 5, stop_beat=5)
+
+
+def test_nemesis_conformance_without_faults():
+    """An empty schedule + an attached membership controller must replay
+    the plain cluster beat-for-beat: no events, no evictions, identical
+    delivered bytes (the PR 8 baselines stay untouched)."""
+    recorder = FlightRecorder()
+    health = HealthMonitor(recorder=recorder)
+    coord = make_coordinator(3, placement="replica")
+    coord.recorder, coord.health = recorder, health
+    nemesis = Nemesis(coord, ())
+    controller = MembershipController(coord, health)
+    plain = scan_signature(coord, num_streams=3)
+    for beat in range(3):
+        nemesis.beat(beat, float(beat))
+        assert scan_signature(coord, num_streams=3) == plain
+        coord.heartbeat(float(beat))
+        controller.heartbeat(float(beat))
+    assert nemesis.timeline == []
+    assert controller.events == []
+    assert recorder.counts().get("membership.evict", 0) == 0

@@ -136,3 +136,62 @@ def test_reclaim_spares_active_scans(server):
     assert active.uuid in server.reader_map
     assert abandoned.uuid not in server.reader_map
     server.finalize(active.uuid)
+
+
+def test_reclaim_stale_on_modeled_clock():
+    """Regression: reclaim_stale judged staleness on the WALL clock even
+    when the deployment runs on a modeled timeline, so a modeled sweep
+    either leaked dead leases forever (modeled now ~0 << monotonic
+    last_activity) or evicted every live lease at once. With a ``clock``
+    hook (or an explicit ``now_s``) the whole lifecycle — stamp, touch,
+    sweep — lives on one timeline."""
+    t = [0.0]
+    eng = Engine()
+    eng.register("/d/t", make_numeric_table("t", 20_000, 2, batch_rows=4096))
+    server = ThallusServer(eng, Fabric(), clock=lambda: t[0])
+    client = ThallusClient(server)
+    active = server.init_scan("SELECT c0 FROM t", "/d/t")
+    client._schema = active.schema
+    abandoned = server.init_scan("SELECT c1 FROM t", "/d/t")
+    t[0] = 100.0
+    server.iterate(active.uuid, client.do_rdma, max_batches=1)  # touch @100
+    assert server.reclaim_stale(older_than_s=50.0) == 1
+    assert active.uuid in server.reader_map
+    assert abandoned.uuid not in server.reader_map
+    # an explicit now_s pins the sweep even without a clock hook
+    assert server.reclaim_stale(older_than_s=10.0, now_s=200.0) == 1
+    assert not server.reader_map
+
+
+def test_crash_kills_leases_and_restore_revives(server):
+    """A crashed server drops its reader map and refuses every protocol
+    verb with ServerCrashedError until restored."""
+    from repro.core import ServerCrashedError
+
+    handle = server.init_scan("SELECT c0 FROM t", "/d/t")
+    server.crash()
+    assert server.crashed and not server.reader_map
+    with pytest.raises(ServerCrashedError):
+        server.init_scan("SELECT c0 FROM t", "/d/t")
+    with pytest.raises(ServerCrashedError):
+        server.iterate(handle.uuid, lambda *a: None, max_batches=1)
+    server.restore()
+    batches = ThallusClient(server).run_query("SELECT c0 FROM t", "/d/t")
+    assert sum(b.num_rows for b in batches) == 50_000
+
+
+def test_crash_after_batches_dies_mid_iterate(server):
+    """``crash(after_batches=n)`` ships n more batches then dies MID-LEASE:
+    the client keeps the delivered prefix, the server is down, and the
+    raised error reports how much of the lease shipped."""
+    from repro.core import ServerCrashedError
+
+    client = ThallusClient(server)
+    handle = server.init_scan("SELECT c0 FROM t", "/d/t")
+    client._schema = handle.schema
+    server.crash(after_batches=2)
+    assert not server.crashed                     # armed, not yet dead
+    with pytest.raises(ServerCrashedError, match="after shipping 2"):
+        server.iterate(handle.uuid, client.do_rdma, max_batches=7)
+    assert server.crashed
+    assert len(client.batches) == 2               # the delivered prefix

@@ -95,7 +95,7 @@ else:
 
 from repro.cluster import (BufferPool, ClusterCoordinator, FaultSpec,
                            MembershipController, MultiStreamPuller, Nemesis,
-                           cluster_scan)
+                           RepairConfig, ShardRepairer, cluster_scan)
 from repro.core import (Fabric, FabricConfig, FlappingFabric, RpcClient,
                         ThallusClient, ThallusServer)
 from repro.engine import Engine, make_numeric_table
@@ -110,7 +110,7 @@ from repro.obs import (QUARANTINED, ClientPopulation, FlightRecorder,
                        SloEngine, SloObjective, StressDriver, Tracer,
                        append_run, current_git_sha, detect_events,
                        load_trajectory, population_classes, record_cluster,
-                       record_health)
+                       record_health, record_repair)
 
 TOTAL_COLS = 8
 CLUSTER_ROWS = 1 << 20
@@ -1389,6 +1389,227 @@ def run_nemesis() -> list[Row]:
     return rows
 
 
+REPAIR_SEED = 13
+REPAIR_BATCHES = 24
+REPAIR_CLEAN_BEATS = 4
+REPAIR_STORM_BEATS = 4
+
+
+def run_repair() -> list[Row]:
+    """Peer-to-peer re-placement over the registered RDMA path, self-asserting.
+
+    Three phases, all on fixed ``FabricConfig`` + seeded populations so every
+    judged number replays identically:
+
+    1. **Live join, peer vs table-copy.** Two identical 4-server shard
+       clusters take the same ``s4`` join; one has a
+       :class:`~repro.cluster.ShardRepairer` attached (joiner pulls its slice
+       server→server over registered pools), the other runs the legacy
+       coordinator table-copy path. Asserts every moved batch rode the peer
+       RDMA path (zero table copies), both clusters scan byte-identical to a
+       coordinatorless engine pass, and the peer path's modeled wire time
+       beats the modeled table-copy equivalent (RPC payload bandwidth + fresh
+       per-segment pins for the same bytes) by ≥ 2×.
+    2. **Evict re-deal, the durability story.** The same clusters lose
+       ``s1``; its orphaned batches have no live registered holder (shards
+       are disjoint), so every orphan must land via the stored-source-table
+       fallback — exactly ``len(orphans)`` table copies — and the scans stay
+       byte-identical. A drained-donor micro-cluster then proves the
+       background-class metering: the repairer YIELDS (modeled backoff) while
+       the donor's token bucket sits under the foreground reserve and absorbs
+       the lease wait on its own clock.
+    3. **Repair storm under foreground load.** The PR 8 stress driver runs
+       an interactive population against a 4-replica cluster; after
+       ``REPAIR_CLEAN_BEATS`` calibration beats, every storm beat churns
+       ``s3`` (evict + rebalance re-admit), forcing a full-replica peer
+       pre-warm per beat. Asserts the storm really moved bytes peer-to-peer
+       every beat, the cluster still scans byte-identical afterwards, and
+       the foreground interactive p50 inflation (storm/clean median) stays
+       bounded — repair is background traffic, not a foreground tax.
+    """
+    base = FabricConfig()
+    ids = ["s0", "s1", "s2", "s3"]
+    table = make_numeric_table("t", REPAIR_BATCHES * (1 << 13), 4,
+                               batch_rows=1 << 13)
+    heavy_sql = "SELECT c0, c1, c2, c3 FROM t"
+
+    def signature(batches):
+        return [tuple(c.values.tobytes() for c in b.columns)
+                for b in batches]
+
+    ref_engine = Engine()
+    ref_engine.register("/d", table)
+
+    def reference(sql):
+        reader = ref_engine.execute(sql, "/d")
+        out = []
+        while (b := reader.read_next()) is not None:
+            out.append(b)
+        return out
+
+    ref_sig = sorted(signature(reference(heavy_sql)))
+
+    def shard_cluster(with_repairer):
+        coord = ClusterCoordinator()
+        for sid in ids:
+            coord.add_server(sid, ThallusServer(Engine(), Fabric(base)))
+        coord.place_shards("/d", table)
+        rep = ShardRepairer(coord) if with_repairer else None
+        return coord, rep
+
+    def scan_sig(coord):
+        got = []
+        cluster_scan(coord, heavy_sql, "/d", sink=lambda i, b: got.append(b))
+        return sorted(signature(got))
+
+    # ---- phase 1: live join — every moved batch rides the peer path -----
+    peer, rep = shard_cluster(True)
+    legacy, _ = shard_cluster(False)
+    for coord in (peer, legacy):
+        coord.add_server("s4", ThallusServer(Engine(), Fabric(base)),
+                         rebalance=True)
+    want = REPAIR_BATCHES // 5
+    assert rep.stats.batches_pulled == want, (
+        f"join moved {want} batches but only {rep.stats.batches_pulled} "
+        f"rode the peer RDMA path")
+    assert rep.stats.table_copies == 0, (
+        f"join fell back to {rep.stats.table_copies} table cop(ies) with "
+        f"every donor alive")
+    assert scan_sig(peer) == scan_sig(legacy) == ref_sig, (
+        "peer-repaired cluster is not byte-identical to the table-copy "
+        "path / the reference")
+    # the modeled table-copy equivalent for the SAME bytes: one RPC payload
+    # per batch at RPC-path bandwidth plus fresh per-segment registration
+    ncols = len(table.schema)
+    copy_equiv_s = (want * (base.rpc_rtt_s + 3 * ncols * base.seg_register_s)
+                    + rep.stats.bytes_pulled / base.rpc_bw)
+    peer_s = rep.stats.modeled_wire_s
+    join_speedup = copy_equiv_s / peer_s
+    _metric("repair_peer_vs_copy_speedup", join_speedup, floor=2.0,
+            better="higher",
+            detail="modeled table-copy cost / peer-pull cost, same bytes")
+    _metric("repair_join_pulled_batches", float(rep.stats.batches_pulled),
+            floor=want, ceiling=want,
+            detail="every moved batch must ride the peer path")
+
+    # ---- phase 2: evict re-deal — sole-holder orphans fall back ---------
+    orphans = len(peer._placements["/d"].assignment["s1"])
+    copies_before = rep.stats.table_copies
+    pulled_before = rep.stats.batches_pulled
+    for coord in (peer, legacy):
+        coord.remove_server("s1")
+    fallbacks = rep.stats.table_copies - copies_before
+    assert fallbacks == orphans, (
+        f"{orphans} orphaned batches had no live holder but only "
+        f"{fallbacks} took the stored-table fallback")
+    assert rep.stats.batches_pulled == pulled_before, (
+        "a re-deal of sole-holder orphans pulled from a dead peer")
+    assert scan_sig(peer) == scan_sig(legacy) == ref_sig, (
+        "post-evict repair is not byte-identical")
+    _metric("repair_evict_fallback_batches", float(fallbacks),
+            floor=orphans, ceiling=orphans,
+            detail="dead sole holder: every orphan uses the durability "
+                   "fallback")
+
+    # metering micro-check: a drained donor bucket makes repair yield
+    # (modeled backoff under the foreground reserve), then wait for tokens
+    micro_adm = ShardedAdmission(
+        AdmissionConfig(max_streams_total=8, lease_rate_per_s=100.0,
+                        lease_burst=8), ["a0", "a1"])
+    micro = ClusterCoordinator(admission=micro_adm)
+    for sid in ("a0", "a1"):
+        micro.add_server(sid, ThallusServer(Engine(), Fabric(base)))
+    micro.place_shards("/m", table)
+    micro_rep = ShardRepairer(micro)
+    micro_adm.lease_wait_s(0.0, 4, server_id="a0")   # drain a0's bucket
+    micro.add_server("a2", ThallusServer(Engine(), Fabric(base)),
+                     rebalance=True)
+    assert micro_rep.stats.yields >= 1, (
+        "repair never yielded to the drained donor bucket")
+    assert micro_rep.stats.throttle_wait_s > 0.0, (
+        "repair paid no lease wait against the drained donor")
+    _metric("repair_meter_yields", float(micro_rep.stats.yields), floor=1,
+            detail="background class must defer to the foreground reserve")
+
+    # ---- phase 3: repair storm under the stress populations -------------
+    recorder = FlightRecorder(capacity=2048)
+    health = HealthMonitor(recorder=recorder)
+    admission = ShardedAdmission(
+        AdmissionConfig(max_streams_total=3 * len(ids),
+                        lease_rate_per_s=2000.0), ids,
+        dist=DistributedConfig(borrow_limit=2))
+    admission.recorder = recorder
+    coord = ClusterCoordinator(admission=admission, recorder=recorder,
+                               health=health)
+    for sid in ids:
+        coord.add_server(sid, ThallusServer(Engine(), Fabric(base)))
+    coord.place_replicas("/d", table)
+    health.bind(admission=admission)
+    storm_rep = ShardRepairer(coord)
+    populations = [
+        ClientPopulation("interactive", weight=4.0, arrival="uniform",
+                         rate_per_beat=3.0, sql=LIGHT_SQL,
+                         cost_hint=1.0, num_streams=2),
+    ]
+    gw = ScanGateway(coord, classes=population_classes(populations),
+                     modeled_service=True, est_service_s_per_cost=1e-4)
+    driver = StressDriver(gw, populations, seed=REPAIR_SEED,
+                          recorder=recorder)
+    clean_p50s = []
+    for _ in range(REPAIR_CLEAN_BEATS):
+        driver.beat()
+        clean_p50s.append(driver.beat_stats["interactive"]["p50_grant_us"])
+    storm_p50s = []
+    storm_pulled = 0
+    for beat in range(REPAIR_STORM_BEATS):
+        before = storm_rep.stats.batches_pulled
+        now_s = float(REPAIR_CLEAN_BEATS + beat)
+        churned = coord.remove_server("s3", now_s=now_s)
+        coord.add_server("s3", churned, rebalance=True, now_s=now_s)
+        storm_pulled += storm_rep.stats.batches_pulled - before
+        driver.beat()
+        storm_p50s.append(driver.beat_stats["interactive"]["p50_grant_us"])
+    clean_p50 = sorted(clean_p50s)[len(clean_p50s) // 2]
+    storm_p50 = sorted(storm_p50s)[len(storm_p50s) // 2]
+    inflation = storm_p50 / clean_p50 if clean_p50 else 1.0
+    assert storm_pulled >= REPAIR_STORM_BEATS * REPAIR_BATCHES, (
+        f"the storm only moved {storm_pulled} batches peer-to-peer "
+        f"(wanted {REPAIR_STORM_BEATS * REPAIR_BATCHES}: a full replica "
+        f"pre-warm per churn beat)")
+    assert scan_sig(coord) == ref_sig, (
+        "post-storm cluster is not byte-identical to the reference")
+    counts = recorder.counts()
+    for kind in ("repair.pull", "repair.complete"):
+        assert counts.get(kind, 0) >= 1, (
+            f"no {kind} event reached the obs funnel (counts={counts})")
+    record_repair(driver.registry, storm_rep.stats)
+    snap = driver.registry.snapshot()
+    assert snap.get("repair.batches_pulled", 0) >= storm_pulled, (
+        "repair.* registry metrics missing from the driver registry")
+    _metric("repair_fg_p50_inflation", inflation, ceiling=1.5,
+            better="lower",
+            detail="interactive p50 under a repair storm / clean p50")
+    _metric("repair_storm_pulled_batches", float(storm_pulled),
+            floor=REPAIR_STORM_BEATS * REPAIR_BATCHES, better="higher",
+            detail="a full replica pre-warm per churn beat")
+
+    rows: list[Row] = []
+    rows.append(Row(
+        "repair_join", peer_s / want * 1e6,
+        f"pulled={want} copies=0 speedup_vs_copy={join_speedup:.2f}x "
+        f"bytes={rep.stats.bytes_pulled}"))
+    rows.append(Row(
+        "repair_evict", rep.stats.modeled_copy_s / fallbacks * 1e6,
+        f"fallbacks={fallbacks}/{orphans} reused={rep.stats.batches_reused} "
+        f"copy_bytes={rep.stats.bytes_copied}"))
+    rows.append(Row(
+        "repair_storm", storm_p50,
+        f"inflation={inflation:.2f}x clean_p50_us={clean_p50:.1f} "
+        f"pulled={storm_pulled} yields={storm_rep.stats.yields} "
+        f"throttle_us={storm_rep.stats.throttle_wait_s * 1e6:.1f}"))
+    return rows
+
+
 _SCENARIOS = {
     "fig2": lambda transport, side_load=False: run(transport),
     "cluster": lambda transport, side_load=False: run_cluster(),
@@ -1401,6 +1622,7 @@ _SCENARIOS = {
     "slo": lambda transport, side_load=False: run_slo(side_load=side_load),
     "stress": lambda transport, side_load=False: run_stress(),
     "nemesis": lambda transport, side_load=False: run_nemesis(),
+    "repair": lambda transport, side_load=False: run_repair(),
 }
 
 
@@ -1429,7 +1651,8 @@ def main() -> int:
     elif args.scenario == "all":
         # fig2 already appends cluster
         scenarios = ["fig2", "contention", "straggler", "sharing",
-                     "admission", "flap", "slo", "stress", "nemesis"]
+                     "admission", "flap", "slo", "stress", "nemesis",
+                     "repair"]
     elif args.scenario is not None:
         scenarios = [args.scenario]
     else:

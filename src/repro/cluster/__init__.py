@@ -19,6 +19,7 @@ from .membership import MembershipController, MembershipEvent  # noqa: F401
 from .mempool import BufferPool, PoolStats, size_class  # noqa: F401
 from .nemesis import FaultSpec, Nemesis, seeded_schedule  # noqa: F401
 from .plan import Endpoint, ScanPlan, plan_scan, probe_batches  # noqa: F401
+from .repair import RepairConfig, RepairStats, ShardRepairer  # noqa: F401
 from .streams import (  # noqa: F401
     ClusterStats, MultiStreamPuller, StreamPuller, StreamStats,
 )

@@ -75,6 +75,12 @@ class ClusterCoordinator:
         self.admission = admission
         self.recorder = recorder       # obs.FlightRecorder (duck-typed)
         self.health = health           # obs.HealthMonitor (duck-typed)
+        # optional cluster.repair.ShardRepairer (duck-typed: observe /
+        # forget / reshard / replicate). When attached, every re-placement
+        # moves bytes peer-to-peer over the registered RDMA path instead of
+        # re-registering slices of the coordinator's stored source table;
+        # without one the legacy table-copy path below runs unchanged.
+        self.repairer = None
         self._placements: dict[str, _Placement] = {}
 
     # ------------------------------------------------- observability funnel
@@ -117,9 +123,13 @@ class ClusterCoordinator:
                 if placement.table is None:
                     continue   # legacy placement with no stored source table
                 if placement.mode == "replica":
-                    server.engine.register(dataset, placement.table)
                     placement.server_ids = tuple(
                         sorted((*placement.server_ids, server_id)))
+                    if self.repairer is not None:
+                        self.repairer.replicate(dataset, placement, server_id,
+                                                now_s=now_s)
+                    else:
+                        server.engine.register(dataset, placement.table)
                     self.notify("placement.repair", server_id=server_id,
                                 now_s=now_s, dataset=dataset, mode="replica",
                                 action="join")
@@ -136,6 +146,10 @@ class ClusterCoordinator:
         controller can stash it for re-admission."""
         server = self.server(server_id)
         del self.servers[server_id]
+        if self.repairer is not None:
+            # the departed server's pinned memory is gone: purge it from the
+            # donor directory BEFORE any re-deal tries to pull from it
+            self.repairer.forget(server_id)
         for dataset, placement in self._placements.items():
             if server_id not in placement.server_ids:
                 continue
@@ -143,7 +157,7 @@ class ClusterCoordinator:
                 sid for sid in placement.server_ids if sid != server_id)
             if placement.mode == "shard" and placement.assignment is not None:
                 orphans = placement.assignment.pop(server_id, ())
-                self._redeal(dataset, placement, orphans)
+                self._redeal(dataset, placement, orphans, now_s=now_s)
                 self.notify("placement.repair", server_id=server_id,
                             now_s=now_s, dataset=dataset, mode="shard",
                             action="leave", moved=len(orphans))
@@ -162,6 +176,7 @@ class ClusterCoordinator:
         total = sum(len(v) for v in assignment.values())
         want = total // (len(placement.server_ids) + 1)
         taken: list[int] = []
+        donors: set[str] = set()
         for _ in range(want):
             # take one batch from the largest donor shard (deterministic
             # tie-break: largest size, then highest server_id) — its
@@ -171,16 +186,26 @@ class ClusterCoordinator:
             *keep, moved = assignment[donor]
             assignment[donor] = tuple(keep)
             taken.append(moved)
-            self._register_shard(dataset, placement, donor)
+            donors.add(donor)
         assignment[joiner] = tuple(sorted(taken))
         placement.server_ids = tuple(sorted((*placement.server_ids, joiner)))
-        self._register_shard(dataset, placement, joiner)
+        if self.repairer is not None:
+            # the joiner pulls FIRST: the moved batches are still pinned on
+            # their donors, so every one rides the peer RDMA path; the
+            # donors then shrink to their kept prefix with zero movement
+            self.repairer.reshard(dataset, placement, joiner, now_s=now_s)
+            for donor in sorted(donors):
+                self.repairer.reshard(dataset, placement, donor, now_s=now_s)
+        else:
+            for donor in sorted(donors):
+                self._register_shard(dataset, placement, donor)
+            self._register_shard(dataset, placement, joiner)
         self.notify("placement.repair", server_id=joiner, now_s=now_s,
                     dataset=dataset, mode="shard", action="join",
                     moved=len(taken))
 
     def _redeal(self, dataset: str, placement: _Placement,
-                orphans: tuple[int, ...]) -> None:
+                orphans: tuple[int, ...], now_s: float = 0.0) -> None:
         """Deal orphaned global batch indices to the smallest surviving
         shards (ties → lowest server_id), keeping each shard sorted."""
         assignment = placement.assignment
@@ -192,7 +217,13 @@ class ClusterCoordinator:
             assignment[target] = tuple(sorted((*assignment.get(target, ()),
                                                idx)))
         for sid in placement.server_ids:
-            self._register_shard(dataset, placement, sid)
+            if self.repairer is not None:
+                # survivors reuse what they hold; the orphaned indices have
+                # no live holder left (shards are disjoint), so each lands
+                # via the stored-table fallback — the durability story
+                self.repairer.reshard(dataset, placement, sid, now_s=now_s)
+            else:
+                self._register_shard(dataset, placement, sid)
 
     def _register_shard(self, dataset: str, placement: _Placement,
                         server_id: str) -> None:
@@ -257,6 +288,8 @@ class ClusterCoordinator:
         self._placements[dataset] = _Placement("shard", tuple(ids),
                                                table=table,
                                                assignment=assignment)
+        if self.repairer is not None:
+            self.repairer.observe(dataset, self._placements[dataset])
 
     def place_replicas(self, dataset: str, table: Table,
                        server_ids: list[str] | None = None) -> None:
@@ -268,6 +301,8 @@ class ClusterCoordinator:
             self.server(sid).engine.register(dataset, table)
         self._placements[dataset] = _Placement("replica", tuple(ids),
                                                table=table)
+        if self.repairer is not None:
+            self.repairer.observe(dataset, self._placements[dataset])
 
     # ------------------------------------------------------------ planning
     def plan(self, sql: str, dataset: str,

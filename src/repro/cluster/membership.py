@@ -97,7 +97,20 @@ class MembershipController:
 
     def _readmit(self, sid: str, now_s: float) -> MembershipEvent:
         server = self._evicted.pop(sid)
+        # the rebalance below IS the re-admit pre-warm: with a repairer
+        # attached it pulls the joiner's slices/replicas peer-to-peer over
+        # the registered RDMA path; attribute that movement to this event
+        repairer = getattr(self.coordinator, "repairer", None)
+        baseline = (dataclasses.replace(repairer.stats)
+                    if repairer is not None else None)
         self.coordinator.add_server(sid, server, rebalance=True, now_s=now_s)
+        if repairer is not None:
+            warm = repairer.stats.delta_since(baseline)
+            if warm.batches_pulled or warm.table_copies or warm.batches_reused:
+                self.coordinator.notify(
+                    "repair.prewarm", server_id=sid, now_s=now_s,
+                    pulled=warm.batches_pulled, copied=warm.table_copies,
+                    reused=warm.batches_reused, bytes=warm.bytes_pulled)
         if self.admission is not None:
             add = getattr(self.admission, "add_shard", None)
             if add is not None and sid not in getattr(self.admission,

@@ -57,6 +57,8 @@ class PoolStats:
     bytes_resident: int = 0         # live slab bytes (free + checked out)
     evictions: int = 0              # slabs dropped + unregistered
     bytes_evicted: int = 0
+    adopted: int = 0                # slabs promoted to long-lived storage
+    bytes_adopted: int = 0
     registered_segments: int = 0    # slabs currently pinned with the fabric
     modeled_register_s: float = 0.0  # one-time pinning cost (amortized)
     acquire_s: float = 0.0          # measured wall time inside acquire()
@@ -81,6 +83,8 @@ class PoolStats:
             bytes_resident=self.bytes_resident,
             evictions=self.evictions - baseline.evictions,
             bytes_evicted=self.bytes_evicted - baseline.bytes_evicted,
+            adopted=self.adopted - baseline.adopted,
+            bytes_adopted=self.bytes_adopted - baseline.bytes_adopted,
             registered_segments=self.registered_segments,
             modeled_register_s=(self.modeled_register_s
                                 - baseline.modeled_register_s),
@@ -157,6 +161,19 @@ class BufferPool:
             else:
                 self._drop(slab)     # class list full: evict outright
         self._evict_over_budget()
+
+    def adopt(self, handle: BulkHandle) -> None:
+        """Promote a checked-out handle's slabs to long-lived storage: they
+        leave the checkout ledger *without* returning to the free lists, so
+        the batch assembled from them stays valid forever (a repaired
+        shard's resident memory). The slabs stay registered and keep
+        counting toward ``bytes_resident``, but — like checkouts — they are
+        never evicted: only ``_drop``-able free slabs are budget fodder."""
+        slabs = self._checked_out.pop(handle.handle_id, None)
+        if slabs is None:
+            raise KeyError(f"handle {handle.handle_id!r} not checked out")
+        self.stats.adopted += len(slabs)
+        self.stats.bytes_adopted += sum(s.nbytes for s in slabs)
 
     # ------------------------------------------------------------ eviction
     def _drop(self, slab: np.ndarray) -> None:

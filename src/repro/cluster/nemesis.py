@@ -10,10 +10,11 @@ once per driver beat and injects/heals exactly what the schedule says, so
 the same ``(seed, FabricConfig, schedule)`` replays the identical fault
 timeline — the PR 8 byte-identical discipline extended to faults.
 
-The nemesis is the *outside world*: it holds direct references to the
-server objects captured at construction, so it can crash, heal, or slow a
-server regardless of whether the membership controller currently has it
-registered. Everything it does is reported through ``coordinator.notify``
+The nemesis is the *outside world*: targets resolve through the
+coordinator's live registry first (so servers that join after construction
+are fair game) with a construction-time snapshot as fallback, so it can
+crash, heal, or slow a server regardless of whether the membership
+controller currently has it registered. Everything it does is reported through ``coordinator.notify``
 (``nemesis.inject`` / ``nemesis.heal``) so the postmortem shows the fault
 next to the recovery it caused.
 """
@@ -61,10 +62,20 @@ class Nemesis:
         self.coordinator = coordinator
         self.schedule = tuple(schedule)
         self.admission = admission
-        # the outside world's view of the fleet: survives evictions
+        # the outside world's view of the fleet: a fallback for servers the
+        # membership layer has evicted. The coordinator's live registry is
+        # consulted first, so post-construction joiners are targetable too.
         self._servers = dict(coordinator.servers)
         self._saved_fabric: dict[str, object] = {}
-        self.active: dict[tuple[str, str], FaultSpec] = {}
+        # overlapping slow faults COMPOUND: every active factor per server,
+        # applied as a product over the saved base config
+        self._slow_factors: dict[str, list[float]] = {}
+        # live injections per (kind, server_id): kill/partition heal their
+        # server-level effect only when the LAST overlapping window closes
+        self._refcount: dict[tuple[str, str], int] = {}
+        # active faults keyed by spec (not (kind, sid)), so two overlapping
+        # windows on one server track — and heal — independently
+        self.active: dict[FaultSpec, int] = {}
         # (beat, action, kind, server_id) — the determinism witness
         self.timeline: list[tuple[int, str, str, str]] = []
 
@@ -81,50 +92,92 @@ class Nemesis:
                 acted.append(spec)
         return acted
 
+    def _server(self, server_id: str):
+        """Resolve a target: the coordinator's live view first (so joiners
+        added after construction are reachable), then the construction
+        snapshot (so evicted servers stay crashable/healable)."""
+        server = self.coordinator.servers.get(server_id)
+        if server is not None:
+            self._servers[server_id] = server     # keep the fallback fresh
+            return server
+        if server_id in self._servers:
+            return self._servers[server_id]
+        raise KeyError(f"nemesis has never seen server {server_id!r}")
+
+    def _apply_slow(self, server, server_id: str) -> None:
+        """(Re)apply the compounded product of every active slow factor."""
+        base = self._saved_fabric[server_id]
+        factor = 1.0
+        for f in self._slow_factors[server_id]:
+            factor *= f
+        server.fabric.config = dataclasses.replace(
+            base, rdma_bw=base.rdma_bw / factor,
+            rpc_bw=base.rpc_bw / factor)
+
     # ------------------------------------------------------------- inject
     def _inject(self, spec: FaultSpec, beat: int, now_s: float) -> None:
-        server = self._servers[spec.server_id]
+        server = self._server(spec.server_id)
+        sid = spec.server_id
+        key = (spec.kind, sid)
         if spec.kind == "kill":
             server.crash(after_batches=spec.after_batches)
         elif spec.kind == "slow":
-            fabric = server.fabric
-            if spec.server_id not in self._saved_fabric:
-                self._saved_fabric[spec.server_id] = fabric.config
-            base = self._saved_fabric[spec.server_id]
-            fabric.config = dataclasses.replace(
-                base, rdma_bw=base.rdma_bw / spec.factor,
-                rpc_bw=base.rpc_bw / spec.factor)
+            if sid not in self._saved_fabric:
+                self._saved_fabric[sid] = server.fabric.config
+            self._slow_factors.setdefault(sid, []).append(spec.factor)
+            self._apply_slow(server, sid)
         else:  # partition
-            if (self.admission is not None
-                    and spec.server_id in getattr(self.admission,
-                                                  "shards", {})):
-                self.admission.partition(spec.server_id)
-        self.active[(spec.kind, spec.server_id)] = spec
-        self.timeline.append((beat, "inject", spec.kind, spec.server_id))
-        self.coordinator.notify("nemesis.inject", server_id=spec.server_id,
+            if (self.admission is None
+                    or sid not in getattr(self.admission, "shards", {})):
+                # the shard is absent (absorbed by an evict, or no sharded
+                # controller at all): nothing was injected, so nothing is
+                # recorded — no phantom faults in the active set/timeline
+                return
+            if self._refcount.get(key, 0) == 0:
+                self.admission.partition(sid)
+        self._refcount[key] = self._refcount.get(key, 0) + 1
+        self.active[spec] = self.active.get(spec, 0) + 1
+        self.timeline.append((beat, "inject", spec.kind, sid))
+        self.coordinator.notify("nemesis.inject", server_id=sid,
                                 now_s=now_s, fault=spec.kind,
                                 stop_beat=spec.stop_beat)
 
     # --------------------------------------------------------------- heal
     def _heal(self, spec: FaultSpec, beat: int, now_s: float) -> None:
-        key = (spec.kind, spec.server_id)
-        if key not in self.active:
+        if self.active.get(spec, 0) <= 0:
             return
-        server = self._servers[spec.server_id]
+        sid = spec.server_id
+        key = (spec.kind, sid)
+        server = self._server(sid)
+        remaining = self._refcount.get(key, 1) - 1
         if spec.kind == "kill":
-            server.restore()
+            if remaining <= 0:
+                server.restore()
         elif spec.kind == "slow":
-            saved = self._saved_fabric.pop(spec.server_id, None)
-            if saved is not None:
-                server.fabric.config = saved
+            factors = self._slow_factors.get(sid, [])
+            try:
+                factors.remove(spec.factor)
+            except ValueError:
+                pass
+            if factors:
+                self._apply_slow(server, sid)    # others still in force
+            else:
+                self._slow_factors.pop(sid, None)
+                saved = self._saved_fabric.pop(sid, None)
+                if saved is not None:
+                    server.fabric.config = saved
         else:  # partition
-            if self.admission is not None:
+            if remaining <= 0 and self.admission is not None:
                 rejoin = getattr(self.admission, "rejoin", None)
-                if rejoin is not None:
-                    rejoin(spec.server_id)
-        del self.active[key]
-        self.timeline.append((beat, "heal", spec.kind, spec.server_id))
-        self.coordinator.notify("nemesis.heal", server_id=spec.server_id,
+                if (rejoin is not None
+                        and sid in getattr(self.admission, "shards", {})):
+                    rejoin(sid)
+        self._refcount[key] = max(0, remaining)
+        self.active[spec] -= 1
+        if self.active[spec] <= 0:
+            del self.active[spec]
+        self.timeline.append((beat, "heal", spec.kind, sid))
+        self.coordinator.notify("nemesis.heal", server_id=sid,
                                 now_s=now_s, fault=spec.kind)
 
 
@@ -134,8 +187,15 @@ def seeded_schedule(seed: int, server_ids: list[str] | tuple[str, ...],
                     min_duration: int = 2,
                     max_duration: int = 4) -> tuple[FaultSpec, ...]:
     """A deterministic random schedule: ``faults`` specs drawn from
-    ``seed``, each targeting one server for a bounded window inside
-    ``[1, beats)``. Same arguments → same schedule, always."""
+    ``seed``, each targeting one server for a bounded window whose
+    ``stop_beat`` never exceeds ``beats`` — a fault the run cannot heal
+    would silently become permanent. Same arguments → same schedule,
+    always (the clamp keeps the draw sequence identical, so seeds that
+    already fit produce the exact schedules they always did)."""
+    if beats < min_duration + 1:
+        raise ValueError(
+            f"beats={beats} cannot fit a fault of min_duration="
+            f"{min_duration} (faults start at beat 1)")
     rng = random.Random(seed)
     ids = sorted(server_ids)
     specs = []
@@ -144,5 +204,6 @@ def seeded_schedule(seed: int, server_ids: list[str] | tuple[str, ...],
         sid = rng.choice(ids)
         duration = rng.randint(min_duration, max_duration)
         start = rng.randint(1, max(1, beats - duration - 1))
+        duration = min(duration, beats - start)   # clamp to the window
         specs.append(FaultSpec(kind, sid, start, stop_beat=start + duration))
     return tuple(specs)

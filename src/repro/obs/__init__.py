@@ -55,7 +55,7 @@ from .recorder import FlightEvent, FlightRecorder  # noqa: F401
 from .registry import (  # noqa: F401
     MetricsRegistry, record_admission, record_any, record_cluster,
     record_fabric, record_gateway, record_health, record_loader,
-    record_pool, record_qos, record_tickets,
+    record_pool, record_qos, record_repair, record_tickets,
 )
 from .slo import SloAlert, SloEngine, SloObjective  # noqa: F401
 from .trace import Span, StreamTrace, TraceContext, Tracer  # noqa: F401

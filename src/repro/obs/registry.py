@@ -114,6 +114,27 @@ def record_pool(reg: MetricsRegistry, pool_stats, prefix: str = "pool") -> None:
     _us(reg, f"{prefix}.acquire.us", s.acquire_s)
 
 
+def record_repair(reg: MetricsRegistry, repair_stats,
+                  prefix: str = "repair") -> None:
+    """``repro.cluster.RepairStats`` → ``repair.*``: the peer-to-peer
+    re-placement traffic (pulls/reuse), the durability fallbacks
+    (``table_copies``), and the background-class QoS charges."""
+    s = repair_stats
+    reg.counter(f"{prefix}.repairs", s.repairs)
+    reg.counter(f"{prefix}.batches_pulled", s.batches_pulled)
+    reg.counter(f"{prefix}.bytes_pulled", s.bytes_pulled)
+    reg.counter(f"{prefix}.segments_pulled", s.segments_pulled)
+    reg.counter(f"{prefix}.batches_reused", s.batches_reused)
+    reg.counter(f"{prefix}.table_copies", s.table_copies)
+    reg.counter(f"{prefix}.bytes_copied", s.bytes_copied)
+    reg.counter(f"{prefix}.yields", s.yields)
+    _us(reg, f"{prefix}.wire.us", s.modeled_wire_s)
+    _us(reg, f"{prefix}.copy.us", s.modeled_copy_s)
+    _us(reg, f"{prefix}.throttle_wait.us", s.throttle_wait_s)
+    _us(reg, f"{prefix}.yield.us", s.yield_s)
+    _us(reg, f"{prefix}.clock.us", s.clock_s)
+
+
 def record_stream(reg: MetricsRegistry, stream_stats,
                   prefix: str = "cluster.stream") -> None:
     """One ``repro.cluster.StreamStats`` → counters + per-stream clock

@@ -11,7 +11,8 @@ from repro.cluster import (ClusterCoordinator, FaultSpec, MembershipController,
 from repro.core import Fabric, FabricConfig, ServerCrashedError, ThallusServer
 from repro.engine import Engine, make_numeric_table
 from repro.obs import FlightRecorder, HealthMonitor
-from repro.qos import ClientClass, ScanGateway, ScanRequest
+from repro.qos import (AdmissionConfig, ClientClass, ScanGateway, ScanRequest,
+                       ShardedAdmission)
 
 ROWS = 40_000
 SQL = "SELECT c0, c1 FROM t"
@@ -289,3 +290,96 @@ def test_nemesis_conformance_without_faults():
     assert nemesis.timeline == []
     assert controller.events == []
     assert recorder.counts().get("membership.evict", 0) == 0
+
+# -------------------------------------------- nemesis fault-collision fixes
+
+
+def test_overlapping_slow_faults_compound_and_heal_stepwise():
+    """Two slow windows overlapping on one server COMPOUND (the bandwidth
+    divisor is the product of the active factors) and heal stepwise: each
+    window's close removes only its own factor, and the base config comes
+    back untouched when the last one lifts."""
+    coord = make_coordinator(3, placement="replica")
+    base = coord.server("s1").fabric.config
+    nem = Nemesis(coord, (
+        FaultSpec("slow", "s1", 1, stop_beat=4, factor=2.0),
+        FaultSpec("slow", "s1", 2, stop_beat=6, factor=4.0)))
+    nem.beat(1, 1.0)
+    cfg = coord.server("s1").fabric.config
+    assert cfg.rdma_bw == pytest.approx(base.rdma_bw / 2.0)
+    nem.beat(2, 2.0)                             # windows overlap: 2x * 4x
+    cfg = coord.server("s1").fabric.config
+    assert cfg.rdma_bw == pytest.approx(base.rdma_bw / 8.0)
+    assert cfg.rpc_bw == pytest.approx(base.rpc_bw / 8.0)
+    assert len(nem.active) == 2
+    nem.beat(3, 3.0)                             # nothing scheduled
+    nem.beat(4, 4.0)                             # first window heals
+    cfg = coord.server("s1").fabric.config
+    assert cfg.rdma_bw == pytest.approx(base.rdma_bw / 4.0)
+    nem.beat(5, 5.0)
+    nem.beat(6, 6.0)                             # last window heals
+    cfg = coord.server("s1").fabric.config
+    assert cfg.rdma_bw == base.rdma_bw and cfg.rpc_bw == base.rpc_bw
+    assert nem.active == {}
+    assert nem._saved_fabric == {}               # base config handed back
+    assert sorted(scan_signature(coord, num_streams=3)) == \
+        sorted(reference_signature())
+
+
+def test_nemesis_targets_post_construction_joiner():
+    """A server that joins AFTER the nemesis is built is fair game: targets
+    resolve through the coordinator's live view, not just the snapshot."""
+    coord = make_coordinator(2, placement="replica")
+    nem = Nemesis(coord, (FaultSpec("kill", "s2", 1, stop_beat=2),))
+    coord.add_server("s2", ThallusServer(Engine(), Fabric(FabricConfig())),
+                     rebalance=True)
+    nem.beat(1, 1.0)                             # no KeyError: live lookup
+    assert coord.server("s2").crashed
+    nem.beat(2, 2.0)
+    assert not coord.server("s2").crashed
+    assert nem.timeline == [(1, "inject", "kill", "s2"),
+                            (2, "heal", "kill", "s2")]
+
+
+def test_partition_without_shard_records_no_phantom_fault():
+    """A partition aimed where no admission shard exists injects nothing —
+    and therefore records nothing: no active entry, no timeline event, and
+    the heal beat of the never-injected fault is a guarded no-op."""
+    coord = make_coordinator(2, placement="replica")     # no admission at all
+    nem = Nemesis(coord, (FaultSpec("partition", "s0", 1, stop_beat=3),))
+    nem.beat(1, 1.0)
+    assert nem.active == {}
+    assert nem.timeline == []
+    nem.beat(3, 3.0)                             # heal side guarded too
+    assert nem.timeline == []
+
+
+def test_partition_heal_survives_absorbed_shard():
+    """A partitioned shard absorbed by an eviction mid-fault must not blow
+    up the heal beat: the rejoin is skipped (the shard is gone) but the
+    heal itself is still recorded against the real injection."""
+    admission = ShardedAdmission(AdmissionConfig(max_streams_total=8),
+                                 ["s0", "s1"])
+    coord = make_coordinator(2, placement="replica", admission=admission)
+    spec = FaultSpec("partition", "s0", 1, stop_beat=3)
+    nem = Nemesis(coord, (spec,), admission=admission)
+    nem.beat(1, 1.0)
+    assert admission.partitioned("s0")
+    assert nem.active == {spec: 1}
+    admission.remove_shard("s0", now_s=2.0)      # evict absorbs the shard
+    nem.beat(3, 3.0)                             # heal: no KeyError
+    assert nem.active == {}
+    assert (3, "heal", "partition", "s0") in nem.timeline
+
+
+def test_seeded_schedule_windows_fit_the_run():
+    """Every drawn window heals inside the run (stop_beat <= beats) even
+    for small beat counts, and a run too short to fit min_duration raises
+    instead of silently emitting unhealable faults."""
+    for seed in range(16):
+        for beats in (3, 4, 5):
+            for spec in seeded_schedule(seed, ["s0", "s1", "s2"],
+                                        beats=beats):
+                assert 1 <= spec.start_beat < spec.stop_beat <= beats
+    with pytest.raises(ValueError, match="cannot fit"):
+        seeded_schedule(0, ["s0"], beats=2)      # min_duration=2 needs >= 3

@@ -1,0 +1,278 @@
+"""Peer-to-peer shard migration & replica repair over the RDMA fast path:
+donor selection off the segment directory, registered-pool pulls with slab
+adoption, the stored-table durability fallback, background-class QoS
+metering, and the failover story when a dead server was the sole holder."""
+import random
+
+import pytest
+from conftest import make_coordinator, reference_batches
+
+from repro.cluster import (BufferPool, MembershipController, MigrationError,
+                           RepairConfig, ShardRepairer, cluster_scan)
+from repro.core import Fabric, FabricConfig, ThallusServer
+from repro.core.bulk import SegmentDesc
+from repro.engine import Engine, make_numeric_table
+from repro.obs import FlightRecorder, HealthMonitor
+from repro.qos import AdmissionConfig, ShardedAdmission
+
+ROWS = 40_000
+SQL = "SELECT c0, c1 FROM t"
+
+
+def fresh_server():
+    return ThallusServer(Engine(), Fabric(FabricConfig()))
+
+
+def scan_signature(coord, sql=SQL, dataset="/d", **kw):
+    got = []
+    cluster_scan(coord, sql, dataset, sink=lambda i, b: got.append(b), **kw)
+    return sorted(tuple(c.values.tobytes() for c in b.columns) for b in got)
+
+
+def reference_signature(sql=SQL, rows=ROWS):
+    return sorted(tuple(c.values.tobytes() for c in b.columns)
+                  for b in reference_batches(sql, rows=rows))
+
+
+# ------------------------------------------------------------- peer pulls
+
+
+def test_join_pulls_batches_peer_to_peer():
+    """A live shard join moves the joiner's slice server→server over the
+    registered pool path — zero table copies, donors attributed in the
+    notify stream — and the repaired cluster scans byte-identical."""
+    recorder = FlightRecorder()
+    coord = make_coordinator(3)
+    coord.recorder = recorder
+    rep = ShardRepairer(coord)
+    total = sum(len(v) for v in coord._placements["/d"].assignment.values())
+    coord.add_server("s3", fresh_server(), rebalance=True)
+    assert rep.stats.batches_pulled == total // 4
+    assert rep.stats.table_copies == 0
+    assert rep.stats.bytes_pulled > 0
+    pulls = recorder.events(kinds=["repair.pull"])
+    assert len(pulls) == total // 4
+    donors = {e.attrs["donor"] for e in pulls}
+    assert donors <= {"s0", "s1", "s2"} and donors
+    assert scan_signature(coord) == reference_signature()
+
+
+def test_peer_repair_matches_legacy_table_copy_bytes():
+    """The peer path and the legacy coordinator-copy path are byte-for-byte
+    interchangeable across the same join + leave sequence."""
+    table = make_numeric_table("t", ROWS, 4, batch_rows=4096)
+    peer = make_coordinator(3, table=table)
+    legacy = make_coordinator(3, table=table)
+    ShardRepairer(peer)
+    for coord in (peer, legacy):
+        coord.add_server("s3", fresh_server(), rebalance=True)
+        coord.remove_server("s0")
+    assert (peer._placements["/d"].assignment
+            == legacy._placements["/d"].assignment)
+    assert scan_signature(peer) == scan_signature(legacy) \
+        == reference_signature()
+
+
+def test_replica_join_pulls_full_copy_from_peers():
+    """A replica join pre-warms the joiner entirely from live donors: every
+    batch pulled, none copied, and the new replica serves byte-identical."""
+    coord = make_coordinator(3, placement="replica")
+    rep = ShardRepairer(coord)
+    batches = len(coord._placements["/d"].table.batches)
+    joiner = fresh_server()
+    coord.add_server("s3", joiner, rebalance=True)
+    assert rep.stats.batches_pulled == batches
+    assert rep.stats.table_copies == 0
+    assert "/d" in joiner.engine.catalog
+    # scan pinned to the joiner alone: its pulled copy is the whole dataset
+    coord.remove_server("s0")
+    coord.remove_server("s1")
+    coord.remove_server("s2")
+    assert scan_signature(coord) == reference_signature()
+
+
+def test_evicted_sole_holder_falls_back_to_stored_table():
+    """A departed shard server's orphans have no live registered holder —
+    the durability fallback streams them from the stored source table."""
+    recorder = FlightRecorder()
+    coord = make_coordinator(4)
+    coord.recorder = recorder
+    rep = ShardRepairer(coord)
+    orphans = len(coord._placements["/d"].assignment["s1"])
+    coord.remove_server("s1")
+    assert rep.stats.table_copies == orphans
+    assert rep.stats.batches_pulled == 0          # nothing to pull: disjoint
+    assert rep.stats.bytes_copied > 0
+    assert len(recorder.events(kinds=["repair.fallback"])) == orphans
+    assert scan_signature(coord) == reference_signature()
+
+
+def test_readmit_prewarm_rides_peer_path():
+    """The membership re-admit pre-warm pulls the returning replica's copy
+    peer-to-peer (a cold-restarted engine included) and reports the
+    movement as ``repair.prewarm``."""
+    recorder = FlightRecorder()
+    health = HealthMonitor(recorder=recorder)
+    coord = make_coordinator(3, placement="replica")
+    coord.recorder, coord.health = recorder, health
+    rep = ShardRepairer(coord)
+    controller = MembershipController(coord, health)
+    server = coord.server("s1")
+    server.crash()
+    for _ in range(3):
+        coord.notify("stream.fault", server_id="s1", now_s=1.0)
+    coord.heartbeat(1.0)
+    controller.heartbeat(1.0)
+    assert controller.evicted == ("s1",)
+    server.engine = Engine()                      # cold restart
+    server.restore()
+    now = 2.0
+    for _ in range(16):
+        if "s1" in coord.servers:
+            break
+        coord.heartbeat(now)
+        controller.heartbeat(now)
+        now += 1.0
+    assert "s1" in coord.servers
+    assert "/d" in server.engine.catalog
+    batches = len(coord._placements["/d"].table.batches)
+    assert rep.stats.batches_pulled == batches    # the pre-warm, all peer
+    prewarms = recorder.events(kinds=["repair.prewarm"])
+    assert prewarms and prewarms[0].attrs["pulled"] == batches
+    assert scan_signature(coord, num_streams=3) == reference_signature()
+
+
+# ----------------------------------------------- sole-holder failover story
+
+
+def test_failover_sole_holder_raises_then_fallback_restores_service():
+    """Every replica of the dataset is dead: the in-flight lease surfaces a
+    typed MigrationError — and the repair fallback then restores service
+    from the stored source table on a fresh joiner."""
+    coord = make_coordinator(2, placement="replica")
+    rep = ShardRepairer(coord)
+    plan = coord.plan(SQL, "/d", num_streams=2)
+    for sid in ("s0", "s1"):
+        coord.server(sid).crash()
+    with pytest.raises(MigrationError):
+        coord.failover_stream(plan.endpoints[0], 0)
+    with pytest.raises(MigrationError):
+        coord.failover_target(plan.endpoints[1])
+    # the holders are gone for good: remove them, join a fresh server
+    coord.remove_server("s0")
+    coord.remove_server("s1")
+    batches = len(coord._placements["/d"].table.batches)
+    coord.add_server("s2", fresh_server(), rebalance=True)
+    assert rep.stats.table_copies == batches      # no live donor anywhere
+    assert rep.stats.batches_pulled == 0
+    assert scan_signature(coord) == reference_signature()
+
+
+# ------------------------------------------------- property: random splits
+
+
+def test_random_membership_walk_stays_byte_identical():
+    """Seeded random join/leave walks over shard placements: the peer path
+    and the legacy table-copy path agree byte-for-byte at every step, and
+    the repairer's segment directory always matches the live assignment."""
+    table = make_numeric_table("t", ROWS, 4, batch_rows=4096)
+    ref = reference_signature()
+    for seed in (3, 11, 29):
+        rng = random.Random(seed)
+        peer = make_coordinator(3, table=table)
+        legacy = make_coordinator(3, table=table)
+        rep = ShardRepairer(peer)
+        next_id, live = 3, 3
+        for _ in range(6):
+            if live > 2 and rng.random() < 0.5:
+                victim = rng.choice(
+                    sorted(peer._placements["/d"].assignment))
+                for coord in (peer, legacy):
+                    coord.remove_server(victim)
+                live -= 1
+            else:
+                sid = f"s{next_id}"
+                next_id += 1
+                for coord in (peer, legacy):
+                    coord.add_server(sid, fresh_server(), rebalance=True)
+                live += 1
+            assignment = peer._placements["/d"].assignment
+            assert assignment == legacy._placements["/d"].assignment
+            for sid, idxs in assignment.items():
+                assert set(rep._held["/d"][sid]) == set(idxs)
+            assert scan_signature(peer) == scan_signature(legacy) == ref
+
+
+# ------------------------------------------------------------ QoS metering
+
+
+def test_repair_yields_to_drained_donor_bucket():
+    """With the donor's token bucket drained below the foreground reserve,
+    repair backs off (modeled yields) and then absorbs its lease wait on
+    the repair clock — foreground stream slots stay untouched."""
+    admission = ShardedAdmission(
+        AdmissionConfig(max_streams_total=8, lease_rate_per_s=100.0,
+                        lease_burst=8), ["s0", "s1"])
+    coord = make_coordinator(2, admission=admission)
+    rep = ShardRepairer(coord, config=RepairConfig(backoff_s=1e-3))
+    admission.lease_wait_s(0.0, 4, server_id="s0")   # drain s0's bucket
+    coord.add_server("s2", fresh_server(), rebalance=True)
+    assert rep.stats.batches_pulled > 0
+    assert rep.stats.yields >= 1
+    assert rep.stats.yield_s > 0.0
+    assert rep.stats.throttle_wait_s > 0.0
+    assert rep.stats.clock_s >= rep.stats.yield_s + rep.stats.throttle_wait_s
+    assert admission.active_total() == 0             # no stream slots taken
+    assert scan_signature(coord) == reference_signature()
+
+
+def test_repair_open_bucket_never_waits():
+    """Without a lease rate (open buckets) the background class runs at
+    full speed: no yields, no waits."""
+    admission = ShardedAdmission(AdmissionConfig(max_streams_total=8),
+                                 ["s0", "s1"])
+    coord = make_coordinator(2, admission=admission)
+    rep = ShardRepairer(coord)
+    coord.add_server("s2", fresh_server(), rebalance=True)
+    assert rep.stats.batches_pulled > 0
+    assert rep.stats.yields == 0
+    assert rep.stats.throttle_wait_s == 0.0
+
+
+# ------------------------------------------------------------- pool adopt
+
+
+def test_pool_adopt_retains_slabs_permanently():
+    fabric = Fabric(FabricConfig())
+    pool = BufferPool(fabric)
+    descs = (SegmentDesc(4096, "uint8", "values", 0),
+             SegmentDesc(64, "int32", "offsets", 0))
+    handle = pool.acquire(descs)
+    pool.adopt(handle)
+    assert pool.outstanding == 0                  # left the checkout ledger
+    assert pool.free_bytes() == 0                 # but NOT back on free lists
+    assert pool.stats.adopted == 2
+    assert pool.stats.bytes_adopted == 4096 + 64
+    assert pool.stats.bytes_resident == 4096 + 64  # still resident+registered
+    assert fabric.registrations == 2
+    with pytest.raises(KeyError):
+        pool.release(handle)                      # adopted: no going back
+    with pytest.raises(KeyError):
+        pool.adopt(handle)
+
+
+def test_pool_adopted_slabs_survive_budget_eviction():
+    """Adopted slabs are shard storage: the LRU budget sweep may only evict
+    free slabs, never adopted ones."""
+    pool = BufferPool(max_bytes=8192)
+    adopted = pool.acquire((SegmentDesc(4096, "uint8", "values", 0),))
+    pool.adopt(adopted)
+    kept = adopted.segments[0]
+    kept[:] = 7
+    # churn enough free slabs through the pool to force budget evictions
+    for _ in range(4):
+        h = pool.acquire((SegmentDesc(8192, "uint8", "values", 0),))
+        pool.release(h)
+    assert pool.stats.evictions >= 1
+    assert (kept == 7).all()                      # adopted bytes untouched
+    assert pool.stats.bytes_resident >= 4096
